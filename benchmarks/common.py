@@ -1,0 +1,21 @@
+"""Shared benchmark output helpers."""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence
+
+
+def table(title: str, header: Sequence[str], rows: Iterable[Sequence]) -> str:
+    rows = [[str(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(header)]
+    def fmt(cells):
+        return " | ".join(c.ljust(w) for c, w in zip(cells, widths))
+    lines = [f"== {title} ==", fmt(header),
+             "-+-".join("-" * w for w in widths)]
+    lines += [fmt(r) for r in rows]
+    return "\n".join(lines)
+
+
+def check(name: str, ok: bool, detail: str = "") -> str:
+    mark = "PASS" if ok else "FAIL"
+    return f"[{mark}] {name}" + (f" — {detail}" if detail else "")

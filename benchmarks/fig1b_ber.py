@@ -1,0 +1,88 @@
+"""Benchmark: paper Fig. 1(b) — model quality vs BER knee, measured by REAL
+bit-error injection on a model trained in-repo (not a lookup table).
+
+The paper measures OPT-1.3B perplexity on WikiText-2; offline we train a
+reduced-config LM on the deterministic synthetic pipeline until it clearly
+beats the uniform baseline, then sweep BER through the knee with the
+bitflip kernel on every operator domain.  The qualitative claim under test:
+flat below ~1e-5, collapse above ~1e-3 (Fig 1b's shape), which is what the
+fault-tolerant policy exploits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import transformer as tf
+from repro.models.layers import FaultConfig
+from repro.optim import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step, softmax_xent
+from .common import check, table
+
+OPS = ("q", "k", "v", "qkt", "sv", "o", "gate", "up", "down")
+
+
+def train_small(steps: int = 80):
+    cfg = get_config("llama3_8b").reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=16)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=5)))
+    loss = float("nan")
+    for i in range(steps):
+        tb = data.batch_at(i)
+        state, m = step(state, {"tokens": jnp.asarray(tb.tokens),
+                                "labels": jnp.asarray(tb.labels)})
+        loss = float(m["loss"])
+    return cfg, state.params, data, loss
+
+
+def run() -> str:
+    cfg, params, data, train_loss = train_small()
+    toks = data.batch_at(500).tokens
+
+    def nll_at(ber: float, seed: int = 0) -> float:
+        fi = None if ber == 0 else FaultConfig(
+            bers={op: jnp.float32(ber) for op in OPS},
+            key=jax.random.PRNGKey(seed), use_systolic_kernel=False)
+        logits, _, _ = tf.forward_logits(params, cfg,
+                                         jnp.asarray(toks[:, :-1]), fi=fi)
+        return float(softmax_xent(logits, jnp.asarray(toks[:, 1:])))
+
+    bers = (0.0, 1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2)
+    nlls = []
+    for b in bers:
+        vals = [nll_at(b, s) for s in range(2 if b > 0 else 1)]
+        nlls.append(float(np.mean(vals)))
+    ppls = [float(np.exp(min(n, 30))) for n in nlls]
+
+    rows = [[f"{b:.0e}" if b else "0", f"{n:.4f}", f"{p:.1f}"]
+            for b, n, p in zip(bers, nlls, ppls)]
+    txt = table("Fig 1(b) — quality vs BER (trained reduced LM, all "
+                "operator domains injected)", ["BER", "NLL", "ppl"], rows)
+
+    clean = nlls[0]
+    mono = all(nlls[i + 1] >= nlls[i] - 0.05 for i in range(2, len(nlls) - 1))
+    checks = [
+        check("model actually trained",
+              train_loss < data.uniform_nll() - 0.3,
+              f"loss {train_loss:.3f} vs uniform {data.uniform_nll():.3f}"),
+        check("quasi-error-free below 1e-6 (Fig 1b: flat at low BER)",
+              abs(nlls[2] - clean) < 0.1,
+              f"ΔNLL={nlls[2] - clean:+.4f}"),
+        check("collapse above 1e-3 (Fig 1b: failure past the knee)",
+              nlls[-2] > clean + 0.5, f"ΔNLL={nlls[-2] - clean:+.3f}"),
+        check("knee shape (flat -> monotone rise)", mono),
+    ]
+    note = ("note: the knee sits ~1 decade below the paper's OPT-1.3B "
+            "(1e-4): a d=64 reduced model with ALL nine domains injected "
+            "simultaneously has far less redundancy — the curve SHAPE, "
+            "which the policy exploits, is what transfers.")
+    return txt + "\n" + "\n".join(checks) + "\n" + note
+
+
+if __name__ == "__main__":
+    print(run())

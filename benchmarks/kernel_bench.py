@@ -1,0 +1,78 @@
+"""Benchmark: Pallas kernel block-shape sweep (structural, dry-run style).
+
+No TPU wall-clock exists in this container, so the sweep reports the
+*structural* determinants of kernel performance for each BlockSpec choice:
+VMEM working set (must fit ~16 MiB with double buffering), MXU alignment,
+grid size, and arithmetic intensity — plus correctness vs the jnp oracle in
+interpret mode.  The chosen default (256x256x256) mirrors the paper's
+256x256 systolic array and is the one EXPERIMENTS.md §Perf iterates from.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from .common import check, table
+
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def sweep_blocks(M=512, K=512, N=512):
+    rows = []
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.randint(ka, (M, K), -128, 128, jnp.int8)
+    b = jax.random.randint(kb, (K, N), -128, 128, jnp.int8)
+    exact = np.asarray(ref.systolic_matmul_ref(a, b))
+    for bm, bn, bk in ((128, 128, 128), (128, 128, 256), (256, 256, 256),
+                       (256, 256, 512), (512, 512, 512)):
+        if M % bm or N % bn or K % bk:
+            continue
+        vmem = bm * bk + bk * bn + bm * bn * 4      # A + B int8, acc int32
+        grid = (M // bm) * (N // bn) * (K // bk)
+        # arithmetic intensity per output tile residency [flops/byte of HBM]
+        ai = (2 * bm * bn * bk) / (bm * bk + bk * bn)
+        t0 = time.time()
+        out = ops.quantized_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+        ok = np.array_equal(np.asarray(out), exact)
+        rows.append([f"{bm}x{bn}x{bk}", f"{vmem / 1024:.0f} KiB",
+                     f"{100 * 2 * vmem / VMEM_BYTES:.1f}%",
+                     str(grid), f"{ai:.0f}",
+                     "mult-of-128" if bm % 128 == 0 and bn % 128 == 0
+                     else "UNALIGNED",
+                     "OK" if ok else "MISMATCH",
+                     f"{time.time() - t0:.1f}s"])
+    return rows
+
+
+def run() -> str:
+    rows = sweep_blocks()
+    txt = table("Systolic int8 matmul — BlockSpec sweep (structural)",
+                ["block (bm,bn,bk)", "VMEM set", "2x-buf VMEM%", "grid",
+                 "AI fl/B", "MXU align", "vs oracle", "interp t"], rows)
+
+    # bitflip kernel: correctness + statistics at the policy-relevant BERs
+    x = jax.random.randint(jax.random.PRNGKey(1), (4096, 128),
+                           -2**30, 2**30, jnp.int32)
+    stats = []
+    for ber in (1e-5, 1e-4, 1e-3):
+        y = ops.inject_bitflips(x, ber, jax.random.PRNGKey(2),
+                                interpret=True)
+        q = 1 - (1 - ber) ** 32
+        rate = float(jnp.mean(y != x))
+        stats.append([f"{ber:.0e}", f"{q:.2e}", f"{rate:.2e}"])
+    txt += "\n" + table("Bitflip kernel — word-upset rate vs expectation",
+                        ["BER", "expected q", "measured"], stats)
+
+    ok_all = all(r[6] == "OK" for r in rows)
+    fits = all(float(r[2].rstrip("%")) < 100 for r in rows)
+    txt += "\n" + check("all block shapes match oracle", ok_all)
+    txt += "\n" + check("all double-buffered working sets fit VMEM", fits)
+    return txt
+
+
+if __name__ == "__main__":
+    print(run())

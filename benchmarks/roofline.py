@@ -1,0 +1,63 @@
+"""Benchmark: roofline table over all dry-run cells (reads
+results/dryrun/*.json produced by ``python -m repro.launch.dryrun --all``)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import table
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> str:
+    cells = load_cells()
+    if not cells:
+        return ("== Roofline == (no dry-run artifacts found; run "
+                "`PYTHONPATH=src python -m repro.launch.dryrun --all`)")
+    rows, skips, fails = [], [], []
+    for c in cells:
+        if "shape" not in c:        # auxiliary artifact (elastic dry-run)
+            continue
+        mesh = "2x16x16" if c.get("multi_pod") else "16x16"
+        tag = f"{c['arch']}/{c['shape']}"
+        if "skipped" in c:
+            skips.append(f"{tag} [{mesh}]: {c['skipped'][:70]}")
+            continue
+        if "error" in c:
+            fails.append(f"{tag} [{mesh}]: {c['error'][:90]}")
+            continue
+        rt = c["roofline"]
+        rows.append([
+            tag, mesh,
+            f"{rt['t_compute']:.2e}", f"{rt['t_memory']:.2e}",
+            f"{rt['t_collective']:.2e}", rt["dominant"],
+            f"{(rt['useful_flops_frac'] or 0):.2f}",
+            f"{(rt['roofline_frac'] or 0) * 100:.2f}%",
+            f"{c.get('state_bytes_per_dev', 0) / 2**30:.1f}",
+        ])
+    txt = table("Roofline — per (arch x shape x mesh); terms in seconds",
+                ["cell", "mesh", "t_comp", "t_mem", "t_coll", "dominant",
+                 "MODEL/HLO", "roofline%", "state GiB/dev"], rows)
+    if skips:
+        txt += "\n-- documented skips --\n" + "\n".join(skips)
+    if fails:
+        txt += "\n-- FAILURES --\n" + "\n".join(fails)
+    n_ok = len(rows)
+    txt += (f"\n[INFO] {n_ok} compiled cells, {len(skips)} documented "
+            f"skips, {len(fails)} failures")
+    return txt
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,61 @@
+"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig1b,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ("table1", "table2", "fig5", "kernels", "fig1b", "roofline")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {SECTIONS}")
+    args = ap.parse_args()
+    want = args.only.split(",") if args.only else list(SECTIONS)
+
+    runners = {}
+    if "table1" in want:
+        from . import table1_aging
+        runners["table1"] = table1_aging.run
+    if "table2" in want:
+        from . import table2_policy
+        runners["table2"] = table2_policy.run
+    if "fig5" in want:
+        from . import fig5_curves
+        runners["fig5"] = fig5_curves.run
+    if "kernels" in want:
+        from . import kernel_bench
+        runners["kernels"] = kernel_bench.run
+    if "fig1b" in want:
+        from . import fig1b_ber
+        runners["fig1b"] = fig1b_ber.run
+    if "roofline" in want:
+        from . import roofline
+        runners["roofline"] = roofline.run
+
+    failed = []
+    for name in want:
+        if name not in runners:
+            continue
+        t0 = time.time()
+        print(f"\n{'#' * 72}\n# benchmark: {name}\n{'#' * 72}")
+        try:
+            out = runners[name]()
+            print(out)
+        except Exception as e:                      # pragma: no cover
+            failed.append(name)
+            print(f"[ERROR] {name}: {type(e).__name__}: {e}")
+        print(f"# ({name} took {time.time() - t0:.1f}s)")
+    if failed:
+        print(f"\nFAILED sections: {failed}")
+        sys.exit(1)
+    print("\nAll benchmark sections completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Aging-aware serving scenario: one accelerator, ten years, two policies.
+
+Serves the same (reduced, briefly trained) model at ages 0/3/6/9.5 years
+under (a) classical resilience-agnostic AVS and (b) the paper's
+fault-tolerant policy, reporting supply voltage, admitted per-operator BER,
+array power, and measured model NLL with real bit-error injection.
+
+Run:  PYTHONPATH=src python examples/aging_aware_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.runtime import AgingAwareRuntime
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig
+from repro.serve.engine import ServeEngine
+from repro.train.steps import init_train_state, make_train_step
+
+
+def quick_train(cfg, data, steps=60):
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=5)))
+    for i in range(steps):
+        tb = data.batch_at(i)
+        state, m = step(state, {"tokens": jnp.asarray(tb.tokens),
+                                "labels": jnp.asarray(tb.labels)})
+    return state.params, float(m["loss"])
+
+
+def main():
+    cfg = get_config("llama3_8b").reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=16)
+    params, loss = quick_train(cfg, data)
+    print(f"[serve] trained reduced model to loss {loss:.3f} "
+          f"(uniform {data.uniform_nll():.3f})\n")
+
+    eval_toks = data.batch_at(999).tokens
+    hdr = (f"{'age':>5} | {'policy':^15} | {'V(q)':>5} {'V(o)':>5} | "
+           f"{'BER(q)':>8} {'BER(o)':>8} | {'P [W]':>6} | {'NLL':>6}")
+    print(hdr + "\n" + "-" * len(hdr))
+    for years in (0.0, 3.0, 6.0, 9.5):
+        for ft in (False, True):
+            rt = AgingAwareRuntime(fault_tolerant=ft)
+            rt.set_age(years=max(years, 1e-3))
+            eng = ServeEngine(cfg, params, runtime=rt, max_len=128)
+            nll = eng.score(eval_toks)
+            q, o = rt.domain_state("q"), rt.domain_state("o")
+            print(f"{years:5.1f} | {'fault-tolerant' if ft else 'baseline':^15}"
+                  f" | {q.v_dd:5.2f} {o.v_dd:5.2f} | {q.ber:8.1e} "
+                  f"{o.ber:8.1e} | {rt.total_power():6.2f} | {nll:6.3f}")
+    print("\nThe fault-tolerant policy holds tolerant domains (q) at "
+          "0.90 V, admitting bounded BER instead of boosting — lower "
+          "power at bounded quality impact (paper Sec. V-C/V-D).  The "
+          "tiny demo model is less BER-resilient than the LLaMA-3-8B the "
+          "default thresholds are calibrated for; recalibrate with "
+          "repro.core.resilience.fit_curve for a new deployment.")
+
+
+if __name__ == "__main__":
+    main()

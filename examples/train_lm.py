@@ -1,0 +1,74 @@
+"""End-to-end training driver: a ~100M-parameter LLaMA-class model for a
+few hundred steps on the deterministic synthetic pipeline, with the full
+fault-tolerant loop (async checkpoints, auto-resume, straggler watchdog).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+On this CPU container the default config is ~100M params (d=512, 8 layers);
+the same script scales to any zoo config with --arch/--full + the
+production mesh via repro.launch.train.
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.steps import init_train_state, make_train_step
+
+
+def lm_100m():
+    """~100M-param llama-family config (CPU-trainable)."""
+    base = get_config("llama3_8b")
+    return dataclasses.replace(
+        base, n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+        d_ff=1408, vocab=32768, head_dim=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    n_params = cfg.param_count()
+    print(f"[train_lm] {cfg.name}-reduced: {n_params / 1e6:.1f}M params")
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch)
+    opt = AdamWConfig(lr=1e-3, total_steps=args.steps,
+                      warmup_steps=args.steps // 10)
+    step = jax.jit(make_train_step(cfg, opt, microbatches=2, remat=True),
+                   donate_argnums=(0,))
+
+    def make_batch(s):
+        tb = data.batch_at(s)
+        import jax.numpy as jnp
+        return {"tokens": jnp.asarray(tb.tokens),
+                "labels": jnp.asarray(tb.labels)}
+
+    loop = TrainLoop(step, data, ckpt_dir=args.ckpt_dir,
+                     cfg=LoopConfig(total_steps=args.steps, log_every=20,
+                                    ckpt_every=100),
+                     make_batch=make_batch)
+    loop.run(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+    losses = [h["loss"] for h in loop.history]
+    print(f"[train_lm] loss: first5={np.mean(losses[:5]):.3f} "
+          f"last5={np.mean(losses[-5:]):.3f} "
+          f"(uniform={data.uniform_nll():.3f}, "
+          f"oracle={data.oracle_nll():.3f})")
+    assert np.mean(losses[-5:]) < data.uniform_nll() - 1.0, \
+        "model failed to learn"
+    print("[train_lm] OK — model learned the synthetic distribution")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing."""
+from .checkpoint import (CheckpointManager, latest_step, load_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

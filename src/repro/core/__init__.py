@@ -1,0 +1,21 @@
+"""The paper's primary contribution: aging-aware adaptive voltage scaling.
+
+Layers:
+* :mod:`repro.core.aging`      — BTI/HCI compact models, history-aware accumulation
+* :mod:`repro.core.waveform`   — equivalent-waveform iterative extrapolation (Fig. 4 f-h)
+* :mod:`repro.core.delay`      — critical-path model + ternary degree-6 polynomial
+* :mod:`repro.core.avs`        — lifetime AVS simulator (lax.scan)
+* :mod:`repro.core.ber`        — delay_max -> BER mapping and inversion
+* :mod:`repro.core.resilience` — BER -> accuracy curves, per-operator tolerances
+* :mod:`repro.core.policy`     — baseline & fault-tolerant voltage-scaling policies
+* :mod:`repro.core.power`      — lifetime power / V_eff model
+* :mod:`repro.core.calibrate`  — one-shot calibration against the paper's Table I
+* :mod:`repro.core.runtime`    — serving-time integration (AgingDomain per operator)
+"""
+from .aging import AgingParams, POPULATIONS  # noqa: F401
+from .avs import LifetimeConfig, run_lifetime, final_shifts  # noqa: F401
+from .delay import DelayPolynomial, PathModel, fit_delay_polynomial  # noqa: F401
+from .ber import BerModel, solve_ber_model  # noqa: F401
+from .power import PowerModel, lifetime_stats  # noqa: F401
+from .policy import BaselinePolicy, FaultTolerantPolicy, evaluate_policy  # noqa: F401
+from .resilience import OPERATORS, ResilienceCurve, tolerable_bers  # noqa: F401

@@ -1,0 +1,42 @@
+"""Load the checked-in calibration artifact into live model objects."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from functools import lru_cache
+from typing import Any, Dict
+
+from .aging import AgingParams
+from .avs import LifetimeConfig
+from .ber import BerModel
+from .delay import DelayPolynomial, PathModel
+from .power import PowerModel
+
+CAL_PATH = os.path.join(os.path.dirname(__file__), "calibrated.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    aging: AgingParams
+    path_model: PathModel
+    delay_poly: DelayPolynomial
+    ber: BerModel
+    power: PowerModel
+    lifetime_cfg: LifetimeConfig
+    raw: Dict[str, Any]
+
+
+@lru_cache(maxsize=1)
+def load_calibration(path: str = CAL_PATH) -> Calibration:
+    with open(path) as f:
+        blob = json.load(f)
+    return Calibration(
+        aging=AgingParams.from_dict(blob["aging"]),
+        path_model=PathModel.from_dict(blob["path_model"]),
+        delay_poly=DelayPolynomial.from_dict(blob["delay_poly"]),
+        ber=BerModel.from_dict(blob["ber"]),
+        power=PowerModel.from_dict(blob["power"]),
+        lifetime_cfg=LifetimeConfig(**blob["lifetime_cfg"]),
+        raw=blob,
+    )

@@ -1,0 +1,109 @@
+"""Timing-error / BER modelling (paper Sec. IV-A).
+
+Under the paper's *uniform aging* first-order approximation all worst-path
+delays scale with one global aging indicator, so the BER is a monotone
+function of the (polynomial) critical-path delay ``d``.  Counting
+sensitisation-weighted violating paths produces a curve whose log-slope is
+steep just past the clock edge (the critical path and its near-critical
+neighbours cross quickly) and flattens as the population and its activity
+thin out — i.e. a saturating form.  We use its smooth closed form
+
+    log10 BER(d) = log10(BER_sat) - a * exp(-(d - t_clk) / tau)
+
+* ``BER_sat`` — sensitisation-weighted saturation rate (all worst paths
+  violating; per-path activation probabilities are the 0.006-0.009
+  toggle statistics of Sec. III-E, orders of magnitude below 1 — paths are
+  rarely fully sensitised, cf. CLIM [12]);
+* ``a``       — decades of BER dynamic range across the aging swing;
+* ``tau``     — delay scale over which the violating-path mass accrues.
+
+For ``d < t_clk`` the expression dives double-exponentially — no timing
+errors with positive slack.  The three parameters are calibrated jointly
+with the fault-tolerant policy (paper Sec. IV-B): inverting the curve at
+the per-operator tolerable BERs must land on the delay thresholds that
+reproduce Table II's final voltages.  The curve is analytically invertible,
+which the policy uses directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from .constants import T_CLK
+
+# Cap for operators whose tolerable BER exceeds BER_sat: their threshold is
+# unreachable ("path delay never reaches the maximum tolerable threshold",
+# paper Sec. V-C).  Any value beyond the end-of-life delay works; we keep it
+# finite for the vmapped simulator.
+DELAY_MAX_CAP = 2.2e-9
+
+
+@dataclasses.dataclass
+class BerModel:
+    log10_sat: float = -4.7     # log10 saturation BER
+    a: float = 7.0              # dynamic range [decades]
+    tau: float = 30.0e-12       # delay scale [s]
+    t_clk: float = T_CLK
+
+    def log10_ber_from_delay(self, d):
+        d = jnp.asarray(d)
+        return self.log10_sat - self.a * jnp.exp(-(d - self.t_clk) / self.tau)
+
+    def ber_from_delay(self, d):
+        """BER as a function of the aged critical-path delay [s]."""
+        return 10.0 ** self.log10_ber_from_delay(d)
+
+    def delay_max_for_ber(self, ber_tol: float) -> float:
+        """Invert BER(d) -> delay threshold [s] (clamped to [t_clk, CAP])."""
+        gap = self.log10_sat - math.log10(max(ber_tol, 1e-30))
+        if gap <= 0.0:          # tolerance above saturation: never reached
+            return DELAY_MAX_CAP
+        d = self.t_clk - self.tau * math.log(gap / self.a)
+        return float(min(max(d, self.t_clk), DELAY_MAX_CAP))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"log10_sat": float(self.log10_sat), "a": float(self.a),
+                "tau": float(self.tau), "t_clk": float(self.t_clk)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BerModel":
+        return cls(**d)
+
+
+def solve_ber_model(anchors: Dict[float, float], *, t_clk: float = T_CLK,
+                    sat_cap: float | None = None) -> BerModel:
+    """Solve (log10_sat, a, tau) through three (delay, BER) anchors.
+
+    ``anchors`` maps delay [s] -> BER.  With exactly three anchors the system
+    is determined: the tau ratio equation is solved by bisection, then a and
+    log10_sat follow linearly.  ``sat_cap`` (a BER) optionally enforces
+    ``BER_sat <= sat_cap`` as a validity check (raises if violated).
+    """
+    (d1, b1), (d2, b2), (d3, b3) = sorted(anchors.items())
+    l1, l2, l3 = (math.log10(b) for b in (b1, b2, b3))
+    x1, x2, x3 = (d - t_clk for d in (d1, d2, d3))
+    target = (l2 - l1) / (l3 - l2)
+
+    def ratio(tau):
+        e1, e2, e3 = (math.exp(-x / tau) for x in (x1, x2, x3))
+        return (e1 - e2) / max(e2 - e3, 1e-300)
+
+    lo, hi = 1e-12, 5e-9
+    for _ in range(200):
+        mid = math.sqrt(lo * hi)
+        if ratio(mid) > target:
+            lo = mid
+        else:
+            hi = mid
+    tau = math.sqrt(lo * hi)
+    e1, e2 = math.exp(-x1 / tau), math.exp(-x2 / tau)
+    a = (l2 - l1) / (e1 - e2)
+    log10_sat = l1 + a * e1
+    if sat_cap is not None and log10_sat > math.log10(sat_cap):
+        raise ValueError(
+            f"BER saturation 1e{log10_sat:.2f} exceeds cap {sat_cap:g}")
+    return BerModel(log10_sat=log10_sat, a=a, tau=tau, t_clk=t_clk)

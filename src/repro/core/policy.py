@@ -1,0 +1,78 @@
+"""Voltage-scaling policies (paper Sec. III-F baseline, Sec. IV fault-tolerant).
+
+* :class:`BaselinePolicy` — classical AVS: raise V_DD on *every* detected
+  timing violation, i.e. ``delay_max = t_clk`` for every operator domain.
+* :class:`FaultTolerantPolicy` — per-operator ``delay_max`` obtained by
+  inverting the BER model at each operator's tolerable BER (user-specified
+  accuracy budget, default 0.5%).  Voltage increases are deferred while the
+  induced BER stays within the operator's resilience.
+
+Both produce a vector of delay thresholds over the operator domains so the
+whole policy evaluates as ONE vmapped lifetime scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping
+
+import numpy as np
+
+from .avs import LifetimeConfig, run_lifetime
+from .ber import BerModel
+from .constants import T_CLK
+from .delay import DelayPolynomial
+from .aging import AgingParams
+from .power import PowerModel, lifetime_stats
+from .resilience import OPERATORS, ResilienceCurve, default_curves, tolerable_bers
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselinePolicy:
+    t_clk: float = T_CLK
+
+    def delay_max(self) -> Dict[str, float]:
+        return {op: self.t_clk for op in OPERATORS}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTolerantPolicy:
+    ber_model: BerModel
+    max_loss_pct: float = 0.5
+    curves: Mapping[str, ResilienceCurve] | None = None
+
+    def tolerable_ber(self) -> Dict[str, float]:
+        return tolerable_bers(self.curves or default_curves(),
+                              self.max_loss_pct)
+
+    def delay_max(self) -> Dict[str, float]:
+        tols = self.tolerable_ber()
+        return {op: self.ber_model.delay_max_for_ber(tol)
+                for op, tol in tols.items()}
+
+
+def evaluate_policy(policy, params: AgingParams, poly: DelayPolynomial,
+                    power: PowerModel,
+                    cfg: LifetimeConfig = LifetimeConfig()) -> Dict[str, Dict]:
+    """Run the lifetime simulation for every operator domain of a policy.
+
+    Returns ``{operator: {v_final, dvp, dvn, v_eff, p_avg, traj}}`` plus the
+    ``baseline`` row (classical AVS) for the power-saving comparison.
+    """
+    dmax = policy.delay_max()
+    ops = list(dmax.keys())
+    vec = np.asarray([dmax[op] for op in ops], np.float32)
+    trajs = run_lifetime(params, poly, cfg, delay_max=vec)
+
+    base = run_lifetime(params, poly, cfg, delay_max=cfg.t_clk)
+    base_stats = lifetime_stats(power, base)
+
+    out: Dict[str, Dict] = {"baseline": dict(base_stats, traj=base)}
+    for i, op in enumerate(ops):
+        traj_i = {k: np.asarray(v)[i] for k, v in trajs.items()}
+        st = lifetime_stats(power, traj_i)
+        st["power_saving_pct"] = 100.0 * (1.0 - st["p_avg"] / base_stats["p_avg"])
+        st["delay_max"] = float(dmax[op])
+        out[op] = dict(st, traj=traj_i)
+    savings = [out[op]["power_saving_pct"] for op in ops]
+    out["avg_power_saving_pct"] = float(np.mean(savings))
+    return out

@@ -1,0 +1,4 @@
+"""Deterministic, stateless, host-shardable synthetic data pipeline."""
+from .pipeline import SyntheticLM, TokenBatch
+
+__all__ = ["SyntheticLM", "TokenBatch"]

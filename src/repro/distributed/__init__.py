@@ -1,0 +1,8 @@
+"""Distribution layer: sharding rules, compressed collectives, elasticity."""
+from .sharding import (batch_spec, cache_specs, data_axes, input_shardings,
+                       param_specs, shard_tree, state_specs)
+
+__all__ = [
+    "batch_spec", "cache_specs", "data_axes", "input_shardings",
+    "param_specs", "shard_tree", "state_specs",
+]

@@ -1,0 +1,80 @@
+"""Elastic scaling: re-mesh a running job to a different device count.
+
+At 1000+ nodes, device loss is routine: a pod drops out, the scheduler hands
+back a different slice.  Elasticity here means the *data* axis is resizable
+at a checkpoint boundary without touching the math:
+
+* parameters / optimizer state are data-replicated -> they re-shard to the
+  new mesh by ``device_put`` with freshly derived NamedShardings;
+* the global batch is preserved by rescaling grad-accumulation microbatches
+  (``data * microbatches == const``), so training curves are unchanged;
+* the deterministic index-based data pipeline (``repro.data``) is stateless
+  per step, so a resumed run on a different DP size reads exactly the same
+  global batch for step k.
+
+``plan_remesh`` computes the new layout; ``reshard_state`` applies it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs import ModelConfig
+from .sharding import state_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatches: int            # grad-accum steps preserving global batch
+
+
+def plan_remesh(old_mesh: Mesh, new_n_devices: int, *, global_batch: int,
+                old_microbatches: int = 1) -> RemeshPlan:
+    """Resize the data axis to fit ``new_n_devices`` (model axis fixed).
+
+    The model (TP) axis is pinned by weight shapes; data parallelism absorbs
+    the delta.  Keeps ``dp * microbatch_size`` constant.
+    """
+    names = old_mesh.axis_names
+    model = old_mesh.shape.get("model", 1)
+    if new_n_devices % model != 0:
+        raise ValueError(f"{new_n_devices} devices not divisible by "
+                         f"model={model}")
+    new_dp = new_n_devices // model
+    old_dp = int(np.prod([old_mesh.shape[a] for a in names if a != "model"]))
+    tokens_per_dp = global_batch * old_microbatches // max(old_dp, 1)
+    if global_batch % new_dp != 0:
+        # shrink dp to the largest divisor of global_batch
+        while new_dp > 1 and global_batch % new_dp != 0:
+            new_dp -= 1
+    new_micro = max(1, (old_dp * old_microbatches) // new_dp)
+    new_shape = tuple(new_dp if a == "data" else
+                      (model if a == "model" else 1) for a in names
+                      if a in ("data", "model"))
+    new_names = tuple(a for a in names if a in ("data", "model"))
+    return RemeshPlan(tuple(old_mesh.shape[a] for a in names), new_shape,
+                      new_names, new_micro)
+
+
+def make_mesh_from_plan(plan: RemeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(plan.new_shape))
+    arr = np.asarray(devices[:n]).reshape(plan.new_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def reshard_state(state, cfg: ModelConfig, new_mesh: Mesh):
+    """Re-place a train/serve state pytree onto a new mesh."""
+    specs = state_specs(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+        cfg, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        state, specs)

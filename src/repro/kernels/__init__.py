@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* :mod:`systolic_matmul` — int8 x int8 -> int32 MXU-tiled matmul (the
+  paper's 256x256 systolic array, TPU-native).
+* :mod:`bitflip`         — BER-parameterised accumulator bit-error injection.
+* :mod:`ops`             — jit'd public wrappers (padding, interpret switch).
+* :mod:`ref`             — pure-jnp oracles.
+"""
+from .ops import (aged_linear, inject_bitflips, quantized_matmul,  # noqa: F401
+                  quantize_int8, make_flip_randoms)
+from .systolic_matmul import systolic_matmul  # noqa: F401
+from .bitflip import bitflip_words  # noqa: F401

@@ -1,0 +1,121 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+* Shapes are padded to block multiples here, so callers can use arbitrary
+  sizes.
+* ``interpret`` defaults to True off-TPU (this container is CPU-only; the
+  kernels TARGET TPU and are validated in interpret mode against ``ref.py``).
+* :func:`aged_linear` is the model-facing op: a float matmul executed the
+  way the paper's accelerator executes it — int8 quantisation, int32
+  systolic accumulation, BER-parameterised accumulator bit upsets, dequant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bitflip import bitflip_words
+from .systolic_matmul import systolic_matmul
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quantized_matmul(a: jax.Array, b: jax.Array, *, bm: int = 256,
+                     bn: int = 256, bk: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """int8 (M,K) @ int8 (K,N) -> int32 (M,N), arbitrary shapes (padded)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    M, N = a.shape[0], b.shape[1]
+    bm_, bn_, bk_ = (min(bm, _ceil_mult(M)), min(bn, _ceil_mult(N)),
+                     min(bk, _ceil_mult(a.shape[1])))
+    ap = _pad_to(a, bm_, bk_)
+    bp = _pad_to(b, bk_, bn_)
+    out = systolic_matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:M, :N]
+
+
+def _ceil_mult(dim: int, base: int = 128) -> int:
+    """Smallest hardware-aligned block >= min(dim, base)."""
+    if dim >= base:
+        return base
+    # small test shapes: round up to the sublane multiple
+    return max(8, int(2 ** np.ceil(np.log2(max(dim, 1)))))
+
+
+def make_flip_randoms(key: jax.Array, shape: tuple[int, ...]):
+    """Uniforms + bit positions for the injection kernel (shared w/ oracle)."""
+    ku, kp = jax.random.split(key)
+    u = jax.random.uniform(ku, shape, jnp.float32)
+    pos = jax.random.randint(kp, shape, 0, 32, jnp.int32)
+    return u, pos
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def inject_bitflips(x: jax.Array, ber, key: jax.Array, *,
+                    interpret: bool | None = None) -> jax.Array:
+    """Flip bits of an int32 tensor at per-bit error rate ``ber``.
+
+    Any shape; internally flattened to (R, 128) tiles for the TPU kernel.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    orig_shape = x.shape
+    n = int(np.prod(orig_shape))
+    block_rows = 256
+    rows = -(-n // 128)
+    rows_pad = -(-rows // block_rows) * block_rows
+    xf = jnp.resize(x.reshape(-1), (rows_pad * 128,)).reshape(rows_pad, 128)
+    u, pos = make_flip_randoms(key, (rows_pad, 128))
+    q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
+    out = bitflip_words(xf, u, pos, q[None], block_rows=block_rows,
+                        interpret=interpret)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-row absmax int8 quantisation; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
+                key: jax.Array | None = None,
+                interpret: bool | None = None,
+                use_kernel: bool = True) -> jax.Array:
+    """``x (.., K) @ w (K, N)`` executed as the paper's systolic array does.
+
+    Quantise activations per-row and weights per-column to int8, multiply
+    with int32 accumulation, inject accumulator bit errors at ``ber``, then
+    dequantise.  ``ber=0`` with ``use_kernel=False`` is the clean fast path
+    used during training.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, xs = quantize_int8(x2, axis=-1)
+    wq, ws = quantize_int8(w, axis=0)
+    if use_kernel:
+        acc = quantized_matmul(xq, wq, interpret=interpret)
+    else:
+        acc = ref.systolic_matmul_ref(xq, wq)
+    if key is not None:
+        acc = inject_bitflips(acc, ber, key, interpret=interpret)
+    out = acc.astype(jnp.float32) * xs * ws
+    return out.reshape(*lead, w.shape[1]).astype(x.dtype)

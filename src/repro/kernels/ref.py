@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels (used by tests and CPU paths)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def systolic_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul oracle."""
+    return jax.lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def bitflip_words_ref(x: jax.Array, u: jax.Array, pos: jax.Array,
+                      q: jax.Array) -> jax.Array:
+    """Oracle for the bit-flip kernel on identical random inputs."""
+    mask = jnp.int32(1) << pos.astype(jnp.int32)
+    return jnp.where(u < q[0], jnp.bitwise_xor(x, mask), x)

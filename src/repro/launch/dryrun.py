@@ -1,0 +1,451 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware: 512
+placeholder CPU devices stand in for 2 TPU pods; ``jax.jit(...).lower(...)
+.compile()`` runs the full GSPMD partitioner, so sharding mismatches,
+unsupported collectives, and compile-time OOMs surface here exactly as they
+would on the real mesh.  ``memory_analysis``/``cost_analysis`` plus the HLO
+collective parse feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks on
+first init) and is deliberately NOT set globally — smoke tests and benches
+see 1 device.
+
+**Scan-trip correction (probes).**  XLA's cost_analysis counts a
+``lax.scan``/while body ONCE, ignoring the trip count (verified in
+``tests/test_dryrun_analysis.py``), so the raw numbers for a 94-layer
+scanned model undercount by ~94x.  We therefore compile *probe* variants of
+each cell whose every scan has trip count 1 — depth ``units x pattern``
+folded into one scan body via ``block_pattern`` replication, attention /
+RWKV chunk scans forced single-chunk, whisper stacks unrolled — at depth
+units {1, 2} and three sequence lengths, then fit
+
+    cost(U, S) = alpha(S) + (U - 1) * beta(S),   alpha/beta quadratic in S
+
+and evaluate at the real (U, S).  The quadratic captures attention's S^2
+exactly; linear-cost archs get ~0 curvature.  The probes run on the SAME
+512-device mesh, so GSPMD's real collective insertion is measured, not
+modelled.  The full cell is still compiled as-is for the compile/sharding
+proof, memory analysis, and the collective-op inventory.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_7b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import contextlib
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, get_config
+from repro.configs.shapes import SHAPES, ShapeCell, applicable
+from repro.distributed.sharding import (batch_spec, cache_specs,
+                                        encdec_cache_spec, input_shardings,
+                                        param_specs, state_specs)
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn_lib
+from repro.models import encdec
+from repro.models import rwkv6 as rwkv_lib
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig
+from repro.serve import steps as serve_steps
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+ARCHS = ("arctic_480b", "qwen3_moe_235b", "recurrentgemma_2b",
+         "whisper_large_v3", "deepseek_7b", "command_r_plus_104b",
+         "starcoder2_7b", "granite_20b", "rwkv6_3b", "paligemma_3b")
+
+# bf16 AdamW moments for the 480B MoE: f32 moments (8 B/param) exceed a
+# single pod's 4 TB HBM for 480B params — EXPERIMENTS.md §Dry-run records
+# the arithmetic.  All other archs use f32 moments.
+BF16_MOMENT_ARCHS = ("arctic_480b",)
+
+PROBE_UNITS = (1, 2)
+
+
+@contextlib.contextmanager
+def probe_mode():
+    """Force every model scan to trip count 1 (see module docstring)."""
+    attn_lib.FORCE_SINGLE_CHUNK = True
+    rwkv_lib.FORCE_SINGLE_CHUNK = True
+    encdec.PROBE_UNROLL = True
+    try:
+        yield
+    finally:
+        attn_lib.FORCE_SINGLE_CHUNK = False
+        rwkv_lib.FORCE_SINGLE_CHUNK = False
+        encdec.PROBE_UNROLL = False
+
+
+def probe_config(cfg: ModelConfig, units: int) -> ModelConfig:
+    """Depth = units x pattern, folded into ONE layer-scan group."""
+    pat = cfg.block_pattern * units
+    return dataclasses.replace(
+        cfg, n_layers=len(pat), block_pattern=pat,
+        n_encoder_layers=units if cfg.n_encoder_layers else 0)
+
+
+def probe_seqs(cell: ShapeCell) -> Tuple[int, ...]:
+    if cell.kind == "train":
+        return (1024, 2048, 4096)
+    if cell.kind == "prefill":
+        return (2048, 4096, 8192)
+    return (4096, 8192, 16384)       # decode: cache depth
+
+
+def layer_units(cfg: ModelConfig) -> float:
+    return cfg.n_layers / len(cfg.block_pattern)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = cell.global_batch, cell.seq_len
+    out: Dict[str, Any] = {}
+    if cell.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif cell.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep cache
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        out["cache_len"] = _sds((), jnp.int32)
+    if cfg.prefix_tokens:
+        out["prefix_embeds"] = _sds((B, cfg.prefix_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.n_encoder_layers:
+        out["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    init = encdec.init_params if cfg.n_encoder_layers else tf.init_params
+    return jax.eval_shape(lambda k: init(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.n_encoder_layers:
+        return jax.eval_shape(lambda: encdec.init_cache(cfg, batch, max_len))
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len))
+
+
+def _tree_bytes_per_device(tree, specs, mesh) -> int:
+    """Per-device bytes of a sharded abstract pytree."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(specs, is_leaf=lambda s:
+                                          isinstance(s, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        total += n * leaf.dtype.itemsize // max(shards, 1)
+    return total
+
+
+# --------------------------------------------------------------------------- #
+def build_lowered(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+                  microbatches: int = 1, fsdp: bool = True,
+                  remat: bool = True, moments_dtype=jnp.float32,
+                  serve_fsdp: bool = False, sharding_overrides=None):
+    """Lower one (cfg, cell) on ``mesh``; returns (lowered, info).
+
+    ``serve_fsdp``: additionally shard serving weights over the data axes
+    (2-D expert/weight sharding — §Perf HC4: a 480B MoE's weights do not
+    fit one device's HBM under TP-only sharding; the per-layer weight
+    gather is the memory-vs-bandwidth trade, taken deliberately).
+    """
+    ns = lambda spec: NamedSharding(mesh, spec)
+    inputs = input_specs(cfg, cell)
+    in_shard = input_shardings(cfg, mesh, cell.global_batch, cell.kind)
+    info: Dict[str, Any] = {}
+
+    if cell.kind == "train":
+        def init():
+            st = init_train_state(cfg, jax.random.PRNGKey(0),
+                                  dtype=jnp.bfloat16)
+            opt = st.opt._replace(
+                mu=jax.tree.map(lambda x: x.astype(moments_dtype), st.opt.mu),
+                nu=jax.tree.map(lambda x: x.astype(moments_dtype), st.opt.nu))
+            return TrainState(st.params, opt, None)
+
+        state_sds = jax.eval_shape(init)
+        st_specs = state_specs(state_sds, cfg, mesh, fsdp=fsdp)
+        if sharding_overrides:
+            st_specs = sharding_overrides(st_specs)
+        step = make_train_step(cfg, AdamWConfig(), microbatches=microbatches,
+                               remat=remat)
+        batch_shard = {k: in_shard.get(k, ns(P())) for k in inputs}
+        st_shard = jax.tree.map(ns, st_specs,
+                                is_leaf=lambda s: isinstance(s, P))
+        jitted = jax.jit(step, in_shardings=(st_shard, batch_shard),
+                         out_shardings=(st_shard, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_sds, inputs)
+        info["state_bytes_per_dev"] = _tree_bytes_per_device(
+            state_sds, st_specs, mesh)
+        return lowered, info
+
+    params_sds = abstract_params(cfg)
+    p_specs = param_specs(params_sds, cfg, mesh, fsdp=serve_fsdp)
+    if sharding_overrides:
+        p_specs = sharding_overrides(p_specs)
+    pshard = jax.tree.map(ns, p_specs, is_leaf=lambda s: isinstance(s, P))
+
+    if cell.kind == "prefill":
+        step = serve_steps.make_prefill_step(cfg, max_len=cell.seq_len)
+        args = [params_sds, inputs["tokens"]]
+        arg_shards = [pshard, in_shard["tokens"]]
+        if cfg.n_encoder_layers:
+            args.append(inputs["frames"])
+            arg_shards.append(in_shard["frames"])
+        elif cfg.prefix_tokens:
+            args.append(inputs["prefix_embeds"])
+            arg_shards.append(in_shard["prefix_embeds"])
+        jitted = jax.jit(step, in_shardings=tuple(arg_shards))
+        lowered = jitted.lower(*args)
+        info["state_bytes_per_dev"] = _tree_bytes_per_device(
+            params_sds, p_specs, mesh)
+        return lowered, info
+
+    # decode
+    b = batch_spec(cell.global_batch, mesh)
+    cache_sds = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+    if cfg.n_encoder_layers:
+        c_specs = encdec_cache_spec(cfg, mesh, cell.global_batch)
+        kv_sds = jax.eval_shape(
+            lambda p, e: encdec.cross_kv(p, cfg, e), params_sds,
+            _sds((cell.global_batch, cfg.encoder_seq, cfg.d_model),
+                 jnp.bfloat16))
+        kv_specs = jax.tree.map(lambda _: P(None, b, None, None, None),
+                                kv_sds)
+    else:
+        c_specs = cache_specs(cfg, mesh, cell.global_batch)
+    step = serve_steps.make_decode_step(cfg)
+    cshard = jax.tree.map(ns, c_specs, is_leaf=lambda s: isinstance(s, P))
+    args = [params_sds, inputs["tokens"], cache_sds, inputs["cache_len"]]
+    arg_shards = [pshard, in_shard["tokens"], cshard, ns(P())]
+    if cfg.n_encoder_layers:
+        args.append(kv_sds)
+        arg_shards.append(jax.tree.map(
+            ns, kv_specs, is_leaf=lambda s: isinstance(s, P)))
+    jitted = jax.jit(step, in_shardings=tuple(arg_shards),
+                     out_shardings=(None, cshard))
+    lowered = jitted.lower(*args)
+    info["state_bytes_per_dev"] = _tree_bytes_per_device(
+        params_sds, p_specs, mesh) + _tree_bytes_per_device(
+        cache_sds, c_specs, mesh)
+    return lowered, info
+
+
+def _compiled_costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = analysis.collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        out[f"coll_{k}"] = float(v)
+    return out
+
+
+def probe_costs(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+                fsdp: bool = True, remat: bool = True,
+                moments_dtype=jnp.float32,
+                sharding_overrides=None) -> Dict[str, Any]:
+    """Scan-trip-corrected per-device costs via the (U, S) probe grid."""
+    seqs = probe_seqs(cell)
+    grid: Dict[Tuple[int, int], Dict[str, float]] = {}
+    with probe_mode():
+        for units in PROBE_UNITS:
+            pcfg = probe_config(cfg, units)
+            for S in seqs:
+                pcell = dataclasses.replace(cell, seq_len=S)
+                lowered, _ = build_lowered(
+                    pcfg, pcell, mesh, microbatches=1, fsdp=fsdp,
+                    remat=remat, moments_dtype=moments_dtype,
+                    sharding_overrides=sharding_overrides)
+                grid[(units, S)] = _compiled_costs(lowered.compile())
+
+    U = layer_units(cfg)
+    S_t = cell.seq_len
+    metrics = sorted(grid[(1, seqs[0])].keys())
+    out: Dict[str, Any] = {"probe_grid": {f"u{u}_s{s}": grid[(u, s)]
+                                          for (u, s) in grid}}
+    for m in metrics:
+        alphas = np.array([grid[(1, s)][m] for s in seqs])
+        betas = np.array([grid[(2, s)][m] - grid[(1, s)][m] for s in seqs])
+        a_fit = np.polyfit(np.array(seqs, float), alphas, 2)
+        b_fit = np.polyfit(np.array(seqs, float), betas, 2)
+        val = float(np.polyval(a_fit, S_t) + (U - 1.0)
+                    * np.polyval(b_fit, S_t))
+        # monotone safeguard: XLA occasionally optimises the 2-unit probe
+        # harder than the 1-unit one (observed for whisper's unrolled
+        # stacks), sending the depth slope negative; the extrapolation must
+        # never fall below the largest measured probe.
+        floor = max(grid[(u, s)][m] for u in PROBE_UNITS for s in seqs)
+        out[m] = max(val, floor, 0.0)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               microbatches: Optional[int] = None, fsdp: bool = True,
+               remat: bool = True, probes: bool = True,
+               sharding_overrides=None) -> Tuple[Any, Dict[str, Any]]:
+    """Build + lower + compile one cell.  Returns (compiled, report)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = applicable(cfg, cell)
+    if not ok:
+        return None, {"arch": arch, "shape": shape, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    b = batch_spec(cell.global_batch, mesh)
+    dp = 1
+    for a in (b if isinstance(b, tuple) else ((b,) if b else ())):
+        dp *= mesh.shape[a]
+    report: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": dict(zip(mesh.axis_names,
+                         (int(mesh.shape[a]) for a in mesh.axis_names))),
+        "n_devices": int(mesh.size), "kind": cell.kind,
+    }
+    moments_dtype = jnp.bfloat16 if arch in BF16_MOMENT_ARCHS else jnp.float32
+    if cell.kind == "train" and microbatches is None:
+        microbatches = max(1, cell.global_batch // dp)
+    if cell.kind == "train":
+        report["microbatches"] = microbatches
+
+    # full-cell compile: the shardability/memory proof
+    lowered, info = build_lowered(
+        cfg, cell, mesh, microbatches=microbatches or 1, fsdp=fsdp,
+        remat=remat, moments_dtype=moments_dtype,
+        sharding_overrides=sharding_overrides)
+    report.update(info)
+    t0 = time.time()
+    compiled = lowered.compile()
+    report["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                report[attr] = int(v)
+    report["raw_costs"] = _compiled_costs(compiled)   # scan-body-once counts
+
+    # probe-extrapolated (scan-trip-corrected) costs + analytic HBM model
+    n_text = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    model_flops = analysis.model_flops_for(cfg, cell, n_text)
+    hbm = analysis.analytic_hbm_bytes(
+        cfg, cell, mesh, microbatches=microbatches or 1, fsdp=fsdp,
+        moments_bytes=2 if arch in BF16_MOMENT_ARCHS else 4)
+    report["hbm_model"] = hbm
+    if probes:
+        pc = probe_costs(cfg, cell, mesh, fsdp=fsdp, remat=remat,
+                         moments_dtype=moments_dtype,
+                         sharding_overrides=sharding_overrides)
+        report["probe_costs"] = {k: v for k, v in pc.items()
+                                 if k != "probe_grid"}
+        report["probe_grid"] = pc["probe_grid"]
+        terms = analysis.RooflineTerms(
+            flops=pc["flops"] * mesh.size,
+            hbm_bytes=hbm["total"] * mesh.size,
+            coll_bytes_per_dev=pc["coll_total"],
+            n_devices=int(mesh.size), model_flops=model_flops)
+        report["roofline"] = terms.to_dict()
+    return compiled, report
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             force: bool = False, **kw) -> Dict[str, Any]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = cell_path(arch, shape, multi_pod)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        compiled, report = lower_cell(arch, shape, multi_pod=multi_pod, **kw)
+    except Exception as e:                          # a failure IS the finding
+        report = {"arch": arch, "shape": shape,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+    report["multi_pod"] = multi_pod
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # llama3_8b (the paper's own case study) is runnable explicitly but is
+    # not part of the assigned 40-cell --all sweep
+    ap.add_argument("--arch", choices=ARCHS + ("llama3_8b",))
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in cells:
+        r = run_cell(arch, shape, multi_pod=mp, force=args.force)
+        mesh_tag = "2x16x16" if mp else "16x16"
+        if "skipped" in r:
+            print(f"[dryrun] {arch:22s} {shape:12s} {mesh_tag:8s} SKIP "
+                  f"({r['skipped'][:60]}...)", flush=True)
+        elif "error" in r:
+            print(f"[dryrun] {arch:22s} {shape:12s} {mesh_tag:8s} FAIL "
+                  f"{r['error'][:90]}", flush=True)
+        else:
+            rt = r["roofline"]
+            print(f"[dryrun] {arch:22s} {shape:12s} {mesh_tag:8s} OK "
+                  f"compile={r['compile_s']:6.1f}s "
+                  f"t_comp={rt['t_compute']:.3e} t_mem={rt['t_memory']:.3e} "
+                  f"t_coll={rt['t_collective']:.3e} dom={rt['dominant']}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

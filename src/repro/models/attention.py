@@ -1,0 +1,181 @@
+"""Attention: GQA/MQA, flash-style chunked online-softmax, sliding window,
+decode-with-KV-cache.  Pure JAX (lax.scan) — TPU-idiomatic chunking bounds
+activation memory for 32k prefill without a custom kernel, and the grouped
+einsum form never materialises repeated KV heads.
+
+Shapes: q (B, S, H, hd) grouped as (B, S, KV, G, hd) with G = H // KV;
+k/v (B, S, KV, hd).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import FaultConfig, op_batched_matmul
+
+NEG_INF = -1e30
+
+# Dry-run cost probes set this: forces the single-block (non-scanned)
+# attention path so XLA cost_analysis — which counts a lax.scan body ONCE,
+# ignoring trip count — sees every FLOP (see repro.launch.dryrun.probe_mode).
+FORCE_SINGLE_CHUNK = False
+
+# EXPERIMENTS.md §Perf HC3: skip fully-masked (future) KV chunks in causal
+# chunked attention.  The naive loop computes all nq x nk chunk pairs — at
+# 32k prefill that is 2x the causal work (plus window waste).  With the
+# flag on, the KV scan only visits chunks that intersect the mask, bounding
+# the inner trip count per query chunk.  Off by default: baselines measure
+# the naive cost.
+CAUSAL_CHUNK_SKIP = False
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int],
+          prefix_len: int = 0, kv_valid: Optional[int] = None):
+    """(Sq, Sk) boolean mask; True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        cm = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len:
+            cm = cm | ((q_pos[:, None] < prefix_len)
+                       & (k_pos[None, :] < prefix_len))
+        m &= cm
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_valid is not None:
+        m &= (k_pos < kv_valid)[None, :]
+    return m
+
+
+def full_attention(q, k, v, *, causal: bool = True,
+                   window: Optional[int] = None, prefix_len: int = 0,
+                   q_offset: int = 0,
+                   fi: Optional[FaultConfig] = None, salt=0):
+    """Reference path for modest S (and the faulted QK^T / SV domains)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd) * (hd ** -0.5)
+    # scores: (B, KV, G, Sq, Sk)
+    qt = qg.transpose(0, 2, 3, 1, 4)                   # B KV G Sq hd
+    kt = k.transpose(0, 2, 3, 1)                       # B KV hd Sk
+    scores = op_batched_matmul(qt, kt[:, :, None], "qkt", fi, salt)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, k_pos, causal, window, prefix_len)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    vt = v.transpose(0, 2, 1, 3)                       # B KV Sk hd
+    out = op_batched_matmul(probs, vt[:, :, None], "sv", fi, salt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, prefix_len: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512):
+    """Flash-style two-level chunked attention (online softmax).
+
+    Outer scan over query chunks, inner scan over KV chunks carrying
+    (running max, denominator, accumulator).  Peak activation is
+    O(q_chunk * kv_chunk) per head — 32k x 32k never materialises.
+    Causality is enforced by masking (the masked upper blocks still lower
+    as FLOPs; see EXPERIMENTS.md §Roofline for the accounting and §Perf for
+    the mitigation).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    q_chunk, kv_chunk = min(q_chunk, S), min(kv_chunk, Sk)
+    # pad to chunk multiples: padded query rows are sliced off at the end;
+    # padded key columns are masked via kv_valid
+    pad_q, pad_k = (-S) % q_chunk, (-Sk) % kv_chunk
+    kv_valid = Sk if pad_k else None
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (S + pad_q) // q_chunk, (Sk + pad_k) // kv_chunk
+    qg = (q * (hd ** -0.5)).reshape(B, nq, q_chunk, KV, G, hd)
+    kg = k.reshape(B, nk, kv_chunk, KV, hd)
+    vg = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    def q_step(_, qi):
+        qc, qidx = qi                                   # (B,qc,KV,G,hd), ()
+        q_pos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kc, vc, kidx = ki
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc,
+                           preferred_element_type=jnp.float32)
+            mask = _mask(q_pos, k_pos, causal, window, prefix_len, kv_valid)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(qc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kg.transpose(1, 0, 2, 3, 4), vg.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (qg.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    # outs: (nq, B, KV, G, qc, hd) -> (B, S(+pad), H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S + pad_q, H, hd)
+    return out[:, :S]
+
+
+def attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+              fi: Optional[FaultConfig] = None, salt=0,
+              chunk_threshold: int = 2048):
+    """Dispatch: chunked for long sequences, full (faultable) otherwise."""
+    if fi is None and q.shape[1] >= chunk_threshold \
+            and not FORCE_SINGLE_CHUNK:
+        qc = min(512, q.shape[1])
+        kc = min(512, k.shape[1])
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 prefix_len=prefix_len, q_chunk=qc,
+                                 kv_chunk=kc)
+    return full_attention(q, k, v, causal=causal, window=window,
+                          prefix_len=prefix_len, fi=fi, salt=salt)
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *,
+                     fi: Optional[FaultConfig] = None, salt=0):
+    """Single-token decode vs a (B, S_max, KV, hd) cache.
+
+    The cache is a *ring buffer*: token t occupies slot ``t % S_max``, so for
+    windowed attention (``S_max == window``) every slot is valid once
+    ``cache_len >= S_max`` — the ring holds exactly the attention window.
+    Attention is permutation-invariant over KV entries, so slot order does
+    not matter; RoPE is applied at absolute positions before caching.
+    """
+    B, _, H, hd = q1.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = (q1 * (hd ** -0.5)).reshape(B, 1, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    kt = k_cache.transpose(0, 2, 3, 1)                 # B KV hd S
+    s = op_batched_matmul(qg, kt[:, :, None], "qkt", fi, salt)  # B KV G 1 S
+    pos = jnp.arange(S)
+    valid = pos < jnp.minimum(cache_len, S)
+    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q1.dtype)
+    vt = v_cache.transpose(0, 2, 1, 3)                 # B KV S hd
+    out = op_batched_matmul(p, vt[:, :, None], "sv", fi, salt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, hd)

@@ -1,0 +1,169 @@
+"""Shared model layers with per-operator fault-injection hooks.
+
+Every matmul in the zoo flows through :func:`op_linear` /
+:func:`op_batched_matmul`, tagged with its operator-domain name (the paper's
+Table II rows).  With a :class:`FaultConfig` attached, the op is executed the
+way the paper's accelerator executes it — int8 systolic matmul + BER
+bit-error injection at that operator's current admitted BER (from
+``repro.core.runtime``).  Without one (training / dry-run) it is a clean
+dense op, keeping the lowered HLO free of simulation artefacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-operator error-injection config for serving-time evaluation."""
+    bers: Dict[str, jax.Array]          # op name -> scalar BER
+    key: jax.Array                      # base PRNG key
+    use_systolic_kernel: bool = True    # int8 Pallas path for weight matmuls
+
+    def ber_for(self, op: str):
+        return self.bers.get(op, jnp.float32(0.0))
+
+    def key_for(self, op: str, salt) -> jax.Array:
+        k = jax.random.fold_in(self.key, _op_salt(op))
+        return jax.random.fold_in(k, salt)
+
+
+_OP_IDS = {op: i for i, op in enumerate(
+    ("q", "k", "v", "qkt", "sv", "o", "gate", "up", "down", "router",
+     "embed", "head", "r", "g", "w", "conv"))}
+
+
+def _op_salt(op: str) -> int:
+    return _OP_IDS.get(op, 31)
+
+
+def op_linear(x: jax.Array, w: jax.Array, op: str,
+              fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    """``x (..., K) @ w (K, N)`` through the operator domain ``op``."""
+    if fi is None:
+        return x @ w
+    return kops.aged_linear(
+        x, w, ber=fi.ber_for(op), key=fi.key_for(op, salt),
+        use_kernel=fi.use_systolic_kernel)
+
+
+def op_einsum(spec: str, x: jax.Array, w: jax.Array, op: str,
+              fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    """Einsum variant for fused head layouts; falls back to 2-D for faults.
+
+    Supports specs whose contraction letters form a *suffix* of the x spec
+    and a *prefix* of the w spec (all uses here: "bsd,dhk->bshk",
+    "bshk,hkd->bsd") — the faulted path flattens both to one 2-D systolic
+    matmul, matching how the accelerator executes the fused layout.
+    """
+    if fi is None:
+        return jnp.einsum(spec, x, w)
+    ins, out_spec = spec.split("->")
+    x_spec, w_spec = ins.split(",")
+    contract = [c for c in x_spec if c in w_spec]
+    nc = len(contract)
+    assert x_spec[-nc:] == w_spec[:nc] == "".join(contract), spec
+    k = 1
+    for d in w.shape[:nc]:
+        k *= d
+    x2 = x.reshape(*x.shape[:x.ndim - nc], k)
+    w2 = w.reshape(k, -1)
+    out = op_linear(x2, w2, op, fi, salt)
+    return out.reshape(*x.shape[:x.ndim - nc], *w.shape[nc:])
+
+
+def op_batched_matmul(a: jax.Array, b: jax.Array, op: str,
+                      fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    """Activation x activation matmul (QK^T / SV domains): ``a @ b`` over
+    leading batch dims, int8-quantised with accumulator upsets when faulted.
+    """
+    if fi is None:
+        return a @ b
+    aq, ascale = kops.quantize_int8(a, axis=-1)
+    bq, bscale = kops.quantize_int8(b, axis=-2)
+    acc = jnp.einsum("...ik,...kj->...ij", aq.astype(jnp.int32),
+                     bq.astype(jnp.int32))
+    acc = kops.inject_bitflips(acc, fi.ber_for(op), fi.key_for(op, salt))
+    return (acc.astype(jnp.float32) * ascale * bscale).astype(a.dtype)
+
+
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * scale
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale
+    if bias is not None:
+        out = out + bias
+    return out.astype(x.dtype)
+
+
+def norm(x: jax.Array, p: Dict, kind: str) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p.get("bias"))
+
+
+def init_norm(kind: str, d: int, dtype) -> Dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / (d // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+def mlp_apply(x: jax.Array, p: Dict, variant: str,
+              fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    if variant == "gated":
+        g = op_linear(x, p["w_gate"], "gate", fi, salt)
+        u = op_linear(x, p["w_up"], "up", fi, salt)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(op_linear(x, p["w_up"], "up", fi, salt))
+    return op_linear(h, p["w_down"], "down", fi, salt)
+
+
+def mlp_init(key, d: int, f: int, variant: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {"w_up": jax.random.normal(k2, (d, f), dtype) * s_in,
+         "w_down": jax.random.normal(k3, (f, d), dtype) * s_out}
+    if variant == "gated":
+        p["w_gate"] = jax.random.normal(k1, (d, f), dtype) * s_in
+    return p

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN with capacity-bucketed sort-free dispatch (EP).
+
+Routing: top-k softmax over expert logits.  Dispatch is gather/scatter based
+(one-hot cumsum positions -> scatter into an (E, C, d) buffer) rather than
+the Switch-style dense dispatch einsum, whose FLOP cost T*E*C*d would dwarf
+the expert FFNs themselves at these shapes; data movement instead of
+redundant compute is the TPU-appropriate trade.  Expert weights carry the
+leading E axis which the sharding rules map onto the "model" mesh axis
+(expert parallelism); the scatter/gather across the token(data) <-> expert
+(model) axes is where SPMD inserts the dispatch collectives (baseline; see
+EXPERIMENTS.md §Perf for the shard_map all-to-all hillclimb).
+
+Dropped tokens (capacity overflow) fall back to the residual path, as usual
+for capacity-based MoE.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import MoEConfig
+from .layers import FaultConfig, mlp_apply, mlp_init, op_linear
+
+
+def moe_init(key, d: int, f: int, moe: MoEConfig, variant: str, dtype) -> Dict:
+    kr, ke, kd = jax.random.split(key, 3)
+    E = moe.n_experts
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "w_router": jax.random.normal(kr, (d, E), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ke, (E, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(kd, (E, f, d), dtype) * s_out,
+    }
+    if variant == "gated":
+        p["w_gate"] = jax.random.normal(
+            jax.random.fold_in(ke, 1), (E, d, f), dtype) * s_in
+    if moe.dense_residual:
+        p["dense"] = mlp_init(jax.random.fold_in(kd, 1), d, f, variant, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(n_tokens * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+# Dispatch algorithm selector (see EXPERIMENTS.md §Perf HC1):
+#   "global"  — one cumsum over ALL B*S*K (token, slot) pairs.  Faithful to
+#               a single-array view but the global cumsum is serial in T*K,
+#               is counted super-linearly by the cost model, and forces
+#               GSPMD to replicate the (T*K, E) routing tensors (huge
+#               all-gathers).  The measured baseline.
+#   "grouped" — GShard-style per-batch-row dispatch: capacity and positions
+#               are computed independently per row (cumsum length S*K, not
+#               B*S*K), keeping every routing tensor batch-sharded; the
+#               expert einsum carries the B axis so tokens meet expert
+#               shards in ONE all-to-all-shaped resharding.
+MOE_DISPATCH = "global"
+
+
+def moe_apply(x: jax.Array, p: Dict, moe: MoEConfig, variant: str,
+              fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    if MOE_DISPATCH == "grouped" and fi is None:
+        return moe_apply_grouped(x, p, moe, variant)
+    return moe_apply_global(x, p, moe, variant, fi, salt)
+
+
+def moe_apply_grouped(x: jax.Array, p: Dict, moe: MoEConfig, variant: str):
+    """Per-row dispatch: x (B, S, d) -> (B, S, d); routing stays sharded."""
+    B, S, d = x.shape
+    E, K = moe.n_experts, moe.top_k
+    C = _capacity(S, moe)                               # per-row capacity
+
+    logits = x @ p["w_router"].astype(x.dtype)          # (B, S, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)              # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    aux = aux_load_balance_loss(probs.reshape(-1, E),
+                                top_e.reshape(-1, K), E)
+
+    flat_e = top_e.reshape(B, S * K)                    # row-major slots
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (B, S*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot       # per-row positions
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, C)                  # C = overflow slot
+
+    xrep = jnp.repeat(x, K, axis=1)                     # (B, S*K, d)
+    bidx = jnp.arange(B)[:, None] * jnp.ones((1, S * K), jnp.int32)
+    buf = jnp.zeros((B, E, C + 1, d), x.dtype)
+    buf = buf.at[bidx, flat_e, safe_pos].set(xrep)[:, :, :C]
+
+    # expert FFN with the batch axis carried: (B, E, C, d) @ (E, d, f)
+    if variant == "gated":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+    out_tok = out_buf[bidx, flat_e, safe_pos]           # (B, S*K, d)
+    out_tok = jnp.where(keep[..., None], out_tok, 0.0)
+    w = top_p.reshape(B, S * K, 1).astype(x.dtype)
+    out = (out_tok * w).reshape(B, S, K, d).sum(axis=2)
+
+    if moe.dense_residual:
+        out = out + mlp_apply(x, p["dense"], variant)
+    return out, aux
+
+
+def moe_apply_global(x: jax.Array, p: Dict, moe: MoEConfig, variant: str,
+                     fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = moe.n_experts, moe.top_k
+    C = _capacity(T, moe)
+    xf = x.reshape(T, d)
+
+    logits = op_linear(xf, p["w_router"].astype(x.dtype), "router", fi, salt)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)              # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    aux = aux_load_balance_loss(probs, top_e, E)
+
+    # position of each (token, slot) within its expert queue
+    flat_e = top_e.reshape(-1)                          # (T*K,) slot-major? no:
+    # reshape is row-major: entries of token t occupy t*K..t*K+K-1 — fine for
+    # cumsum ordering (token order preserved, slots interleaved).
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (T*K, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, C)                  # C = overflow slot
+
+    # scatter tokens into the (E, C+1, d) expert buffer (overflow row dropped)
+    xrep = jnp.repeat(xf, K, axis=0)                    # (T*K, d)
+    buf = jnp.zeros((E, C + 1, d), x.dtype).at[flat_e, safe_pos].set(xrep)
+    buf = buf[:, :C]
+
+    # expert FFN: (E, C, d) @ (E, d, f)
+    if variant == "gated":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # gather back and combine with router weights
+    out_tok = out_buf[flat_e, safe_pos]                 # (T*K, d)
+    out_tok = jnp.where(keep[:, None], out_tok, 0.0)
+    w = top_p.reshape(-1)[:, None].astype(x.dtype)
+    out = (out_tok * w).reshape(T, K, d).sum(axis=1)
+
+    if moe.dense_residual:
+        out = out + mlp_apply(xf, p["dense"], variant, fi, salt)
+    return out.reshape(B, S, d), aux
+
+
+def aux_load_balance_loss(logits_or_probs, top_e, n_experts: int):
+    """Switch-style load-balancing auxiliary loss."""
+    probs = logits_or_probs
+    me = probs.mean(axis=0)                              # (E,)
+    ce = jnp.zeros((n_experts,)).at[top_e.reshape(-1)].add(1.0)
+    ce = ce / top_e.size
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,107 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv1d + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+
+    r_t = sigmoid(x_t W_a);  i_t = sigmoid(x_t W_x)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal-linear, so training/prefill uses
+``jax.lax.associative_scan`` (O(log S) depth — TPU-friendly) and decode is a
+single fused update.  The block is Griffin's: two branches (gate: GeLU;
+recurrent: conv1d(4) -> RG-LRU), multiplied, projected back.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import FaultConfig, op_linear
+
+C_RGLRU = 8.0
+CONV_W = 4
+
+
+def rglru_init(key, d: int, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, d), dtype) * s,     # input proj
+        "w_gate": jax.random.normal(ks[1], (d, d), dtype) * s,  # gate branch
+        "w_out": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_a": jax.random.normal(ks[3], (d, d), dtype) * s,     # recurrence gate
+        "w_i": jax.random.normal(ks[4], (d, d), dtype) * s,     # input gate
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (d,), jnp.float32, 0.7, 1.3)),
+        "conv_w": jnp.zeros((CONV_W, d), dtype).at[-1].set(1.0),
+        "conv_b": jnp.zeros((d,), dtype),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+            state: Optional[jax.Array] = None):
+    """Causal depthwise conv, width CONV_W.  x: (B, S, d).
+
+    ``state``: (B, CONV_W-1, d) trailing inputs from the previous segment
+    (decode); returns (y, new_state).
+    """
+    B, S, d = x.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_W - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+3, d)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(CONV_W)) + b
+    return y, xp[:, -(CONV_W - 1):]
+
+
+def _rglru_scan(xin: jax.Array, a: jax.Array,
+                h0: Optional[jax.Array] = None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t via assoc. scan."""
+    b = xin
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(x: jax.Array, p: Dict, *, state: Optional[Dict] = None,
+                fi: Optional[FaultConfig] = None, salt=0
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d) -> (B, S, d); state carries (conv, h) across segments."""
+    gate = jax.nn.gelu(op_linear(x, p["w_gate"], "g", fi, salt))
+    u = op_linear(x, p["w_x"], "v", fi, salt)
+    conv_state = state["conv"] if state else None
+    u, new_conv = _conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(op_linear(u, p["w_a"], "r", fi, salt)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(op_linear(u, p["w_i"], "k", fi, salt)
+                       .astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    xin = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * u.astype(jnp.float32))
+
+    h0 = state["h"] if state else None
+    if x.shape[1] == 1 and state is not None:           # decode fast path
+        h = a[:, 0] * h0 + xin[:, 0]
+        hs = h[:, None]
+    else:
+        hs = _rglru_scan(xin, a, h0)
+        h = hs[:, -1]
+    out = op_linear(hs.astype(x.dtype) * gate, p["w_out"], "o", fi, salt)
+    new_state = {"conv": new_conv, "h": h} if state is not None else None
+    return out, new_state
+
+
+def rglru_init_state(batch: int, d: int, dtype) -> Dict:
+    return {"conv": jnp.zeros((batch, CONV_W - 1, d), dtype),
+            "h": jnp.zeros((batch, d), jnp.float32)}

@@ -1,0 +1,420 @@
+"""Decoder-only LM assembly: block patterns, grouped layer scan, KV caches.
+
+Depth is handled by ``jax.lax.scan`` over *stacked* layer groups so compile
+time and HLO size are O(1) in depth (DESIGN.md Sec. 5).  A group is one
+period of ``cfg.block_pattern`` (e.g. ("rec","rec","attn") for
+RecurrentGemma); layers beyond the last full period form an unstacked tail.
+
+The same assembly serves dense, MoE, hybrid, SSM (RWKV) and VLM (prefix
+embeddings + prefix-bidirectional mask) families; whisper's encoder/decoder
+live in :mod:`repro.models.encdec` on top of the same block functions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from . import attention as attn_lib
+from .layers import (FaultConfig, apply_rope, init_norm, mlp_apply, mlp_init,
+                     norm, op_einsum, op_linear, rms_norm)
+from .moe import moe_apply, moe_init
+from .rglru import rglru_block, rglru_init, rglru_init_state
+from .rwkv6 import (rwkv_channel_mix, rwkv_channel_mix_init, rwkv_init_state,
+                    rwkv_time_mix, rwkv_time_mix_init)
+
+
+# --------------------------------------------------------------------------- #
+# block parameter init
+# --------------------------------------------------------------------------- #
+def _attn_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, KV, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, KV, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H, hd, d), dtype) * (H * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _block_init(key, kind: str, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"norm1": init_norm(cfg.norm, d, dtype),
+         "norm2": init_norm(cfg.norm, d, dtype)}
+    if kind == "attn":
+        p["attn"] = _attn_init(k1, cfg, dtype)
+        p["ffn"] = (moe_init(k2, d, f, cfg.moe, cfg.mlp, dtype) if cfg.moe
+                    else mlp_init(k2, d, f, cfg.mlp, dtype))
+    elif kind == "rec":
+        p["rglru"] = rglru_init(k1, d, dtype)
+        p["ffn"] = mlp_init(k2, d, f, cfg.mlp, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv_time_mix_init(k1, d, cfg.rwkv_head_dim, dtype)
+        p["cm"] = rwkv_channel_mix_init(k2, d, f, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layer_kinds(cfg: ModelConfig):
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict:
+    kinds = _layer_kinds(cfg)
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail_kinds = kinds[n_groups * len(pat):]
+
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), dtype) * 0.02,
+        "final_norm": init_norm(cfg.norm, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (d, cfg.vocab),
+                                              dtype) * d ** -0.5
+    if cfg.prefix_tokens:
+        params["prefix_proj"] = jax.random.normal(keys[2], (d, d),
+                                                  dtype) * d ** -0.5
+
+    def one_group(gkey):
+        gks = jax.random.split(gkey, len(pat))
+        return {f"b{i}_{kind}": _block_init(gks[i], kind, cfg, dtype)
+                for i, kind in enumerate(pat)}
+
+    if n_groups:
+        gkeys = jax.random.split(keys[3], n_groups)
+        params["groups"] = jax.vmap(one_group)(gkeys)
+    if tail_kinds:
+        tks = jax.random.split(keys[4], len(tail_kinds))
+        params["tail"] = [
+            {f"b0_{kind}": _block_init(tks[i], kind, cfg, dtype)}
+            for i, kind in enumerate(tail_kinds)]
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# int8 weight quantisation (EXPERIMENTS.md §Perf HC3 — paper-native: the
+# accelerator's systolic array is int8; serving weights live in HBM as int8
+# + per-output-channel scales and are dequantised PER LAYER GROUP inside the
+# scan body, so the bf16 copy only ever exists for the layer being computed.
+# Halves weight HBM residency/traffic and any weight collectives.
+# --------------------------------------------------------------------------- #
+def quantize_params(params: Dict) -> Dict:
+    """bf16/f32 param tree -> int8 {"int8_q","int8_s"} leaves (>=2-D only)."""
+    def q(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        amax = jnp.max(jnp.abs(leaf.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        s = jnp.maximum(amax, 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(leaf.astype(jnp.float32) / s),
+                      -127, 127).astype(jnp.int8)
+        return {"int8_q": qv, "int8_s": s.astype(jnp.float32)}
+    return jax.tree.map(q, params)
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and "int8_q" in x
+
+
+def dequant_tree(tree, dtype=jnp.bfloat16):
+    """Dequantise every int8 leaf (called inside the layer-scan body)."""
+    return jax.tree.map(
+        lambda x: (x["int8_q"].astype(dtype) * x["int8_s"].astype(dtype)
+                   if _is_qleaf(x) else x),
+        tree, is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict))
+
+
+# --------------------------------------------------------------------------- #
+# block application
+# --------------------------------------------------------------------------- #
+def _attn_block(x, bp, cfg: ModelConfig, *, positions, prefix_len,
+                cache=None, cache_len=None, fi=None, salt=0):
+    """Self-attention + FFN block.  With ``cache`` (decode): single token."""
+    h = norm(x, bp["norm1"], cfg.norm)
+    ap = bp["attn"]
+    q = op_einsum("bsd,dhk->bshk", h, ap["wq"], "q", fi, salt)
+    k = op_einsum("bsd,dhk->bshk", h, ap["wk"], "k", fi, salt)
+    v = op_einsum("bsd,dhk->bshk", h, ap["wv"], "v", fi, salt)
+    if cfg.qk_norm:
+        q, k = rms_norm(q, ap["q_norm"]), rms_norm(k, ap["k_norm"])
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        qcache = _is_qleaf(cache["k"])   # int8 KV cache (§Perf HC3)
+        kbuf = cache["k"]["int8_q"] if qcache else cache["k"]
+        kv_len = kbuf.shape[1]
+        if q.shape[1] == 1:      # decode: ring-write to cache, attend
+            # ring addressing: token t lives at slot t % kv_len (identity for
+            # full-length caches; wraps for windowed local attention)
+            idx = jnp.remainder(cache_len - 1, kv_len)
+            if qcache:
+                knew, vnew = quantize_cache_entry(k), quantize_cache_entry(v)
+                upd = jax.lax.dynamic_update_slice_in_dim
+                kc = {f: upd(cache["k"][f], knew[f], idx, 1) for f in knew}
+                vc = {f: upd(cache["v"][f], vnew[f], idx, 1) for f in vnew}
+                k_at = kc["int8_q"].astype(q.dtype) \
+                    * kc["int8_s"].astype(q.dtype)
+                v_at = vc["int8_q"].astype(q.dtype) \
+                    * vc["int8_s"].astype(q.dtype)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                         idx, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                         idx, 1)
+                k_at, v_at = kc, vc
+            out = attn_lib.decode_attention(q, k_at, v_at, cache_len, fi=fi,
+                                            salt=salt)
+            new_cache = {"k": kc, "v": vc}
+        else:                    # prefill: run full attn, stash K/V
+            out = attn_lib.attention(q, k, v, causal=True, window=cfg.window,
+                                     prefix_len=prefix_len, fi=fi, salt=salt)
+            S = k.shape[1]
+            if S >= kv_len:      # windowed: keep the last kv_len tokens,
+                                 # rolled so token t sits at slot t % kv_len
+                kc = jnp.roll(k[:, -kv_len:], S % kv_len, axis=1)
+                vc = jnp.roll(v[:, -kv_len:], S % kv_len, axis=1)
+            else:
+                pad = kv_len - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if qcache:
+                kc, vc = quantize_cache_entry(kc), quantize_cache_entry(vc)
+            new_cache = {"k": kc, "v": vc}
+    else:
+        out = attn_lib.attention(q, k, v, causal=True, window=cfg.window,
+                                 prefix_len=prefix_len, fi=fi, salt=salt)
+    x = x + op_einsum("bshk,hkd->bsd", out, ap["wo"], "o", fi, salt)
+
+    h2 = norm(x, bp["norm2"], cfg.norm)
+    if cfg.moe:
+        y, aux = moe_apply(h2, bp["ffn"], cfg.moe, cfg.mlp, fi, salt)
+    else:
+        y, aux = mlp_apply(h2, bp["ffn"], cfg.mlp, fi, salt), 0.0
+    return x + y, new_cache, aux
+
+
+def _rec_block(x, bp, cfg: ModelConfig, *, state=None, fi=None, salt=0):
+    h = norm(x, bp["norm1"], cfg.norm)
+    out, new_state = rglru_block(h, bp["rglru"], state=state, fi=fi,
+                                 salt=salt)
+    x = x + out
+    h2 = norm(x, bp["norm2"], cfg.norm)
+    return x + mlp_apply(h2, bp["ffn"], cfg.mlp, fi, salt), new_state, 0.0
+
+
+def _rwkv_block(x, bp, cfg: ModelConfig, *, state=None, fi=None, salt=0):
+    h = norm(x, bp["norm1"], cfg.norm)
+    out, tm_state = rwkv_time_mix(h, bp["tm"], cfg.rwkv_head_dim,
+                                  state=state["tm"] if state else None,
+                                  fi=fi, salt=salt)
+    x = x + out
+    h2 = norm(x, bp["norm2"], cfg.norm)
+    out2, cm_shift = rwkv_channel_mix(h2, bp["cm"],
+                                      state=state["cm_shift"] if state
+                                      else None, fi=fi, salt=salt)
+    new_state = ({"tm": tm_state, "cm_shift": cm_shift}
+                 if state is not None else None)
+    return x + out2, new_state, 0.0
+
+
+def _apply_block(x, bp, kind, cfg, *, positions, prefix_len, state, cache_len,
+                 fi, salt):
+    if kind == "attn":
+        return _attn_block(x, bp, cfg, positions=positions,
+                           prefix_len=prefix_len, cache=state,
+                           cache_len=cache_len, fi=fi, salt=salt)
+    if kind == "rec":
+        return _rec_block(x, bp, cfg, state=state, fi=fi, salt=salt)
+    if kind == "rwkv":
+        return _rwkv_block(x, bp, cfg, state=state, fi=fi, salt=salt)
+    raise ValueError(kind)
+
+
+def _run_blocks(x, params, cfg: ModelConfig, *, positions, prefix_len=0,
+                states=None, cache_len=None, fi=None, remat=False):
+    """Scan the grouped blocks (+ tail); threads per-block state pytrees.
+
+    ``remat=True`` rematerialises each layer group in the backward pass
+    (activation checkpointing at group granularity: stored activations are
+    O(n_groups * B * S * d) instead of every intermediate — the standard
+    memory/compute trade for the train_4k cells; matmul outputs with no
+    batch dims are kept per ``dots_with_no_batch_dims_saveable``).
+    """
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    have_state = states is not None
+
+    def group_step(carry, inp):
+        from repro.distributed.sharding import constrain_activation
+        x, aux = carry
+        x = constrain_activation(x)   # pin batch sharding across the scan
+        gparams, gstate, gidx = inp
+        gparams = dequant_tree(gparams, x.dtype)   # no-op unless int8 leaves
+        new_gstate = {}
+        for i, kind in enumerate(pat):
+            key = f"b{i}_{kind}"
+            st = gstate[key] if have_state else None
+            salt = gidx * len(pat) + i
+            x, ns, a = _apply_block(x, gparams[key], kind, cfg,
+                                    positions=positions,
+                                    prefix_len=prefix_len, state=st,
+                                    cache_len=cache_len, fi=fi, salt=salt)
+            new_gstate[key] = ns if have_state else jnp.zeros((0,))
+            aux = aux + a
+        return (x, aux), new_gstate
+
+    new_states = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if n_groups:
+        if have_state:
+            gstates = states["groups"]
+        else:
+            gstates = {f"b{i}_{kind}": jnp.zeros((n_groups, 0))
+                       for i, kind in enumerate(pat)}
+        step_fn = group_step
+        if remat:
+            step_fn = jax.checkpoint(
+                group_step,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        (x, aux_total), scanned_states = jax.lax.scan(
+            step_fn, (x, aux_total),
+            (params["groups"], gstates, jnp.arange(n_groups)))
+        if have_state:
+            new_states["groups"] = scanned_states
+    for t, tp in enumerate(params.get("tail", [])):
+        tp = dequant_tree(tp, x.dtype)
+        (key,) = tp.keys()
+        kind = key.split("_", 1)[1]
+        st = states["tail"][t][key] if have_state else None
+        x, ns, a = _apply_block(x, tp[key], kind, cfg, positions=positions,
+                                prefix_len=prefix_len, state=st,
+                                cache_len=cache_len, fi=fi,
+                                salt=n_groups * len(pat) + t)
+        aux_total = aux_total + a
+        if have_state:
+            new_states.setdefault("tail", []).append({key: ns})
+    return x, (new_states if have_state else None), aux_total
+
+
+# --------------------------------------------------------------------------- #
+# public API
+# --------------------------------------------------------------------------- #
+def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                 dtype=jnp.bfloat16, with_prefix=True):
+    emb = params["embed"]
+    if _is_qleaf(emb):        # gather int8 rows, dequantise the slice only
+        x = emb["int8_q"][tokens].astype(dtype) \
+            * emb["int8_s"][tokens].astype(dtype)
+    else:
+        x = emb[tokens]
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.prefix_tokens and with_prefix:
+        assert prefix_embeds is not None
+        proj = dequant_tree({"p": params["prefix_proj"]}, x.dtype)["p"]
+        pe = op_linear(prefix_embeds.astype(x.dtype), proj, "embed")
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    w = dequant_tree({"w": w}, x.dtype)["w"]
+    if cfg.tie_embeddings:
+        w = w.T
+    return (x @ w).astype(jnp.float32)
+
+
+def forward_logits(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+                   fi: Optional[FaultConfig] = None,
+                   states=None, cache_len=None, remat=False):
+    """Full-sequence forward (train / prefill).  tokens: (B, S_text)."""
+    x = embed_tokens(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, new_states, aux = _run_blocks(
+        x, params, cfg, positions=positions, prefix_len=cfg.prefix_tokens,
+        states=states, cache_len=cache_len, fi=fi, remat=remat)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return unembed(params, cfg, x), new_states, aux
+
+
+def quantize_cache_entry(x):
+    """bf16 (B, 1, KV, hd) -> int8 + per-(token, head) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127) \
+        .astype(jnp.int8)
+    return {"int8_q": q, "int8_s": s.astype(jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, quantized: bool = False) -> Dict:
+    """Decode-state pytree mirroring the grouped param structure.
+
+    ``quantized=True`` stores attention K/V as int8 + per-(token, head)
+    scales (§Perf HC3): the cache — the dominant HBM traffic of decode — is
+    halved; dequantisation fuses into the attention matmul's operand read.
+    """
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail_kinds = _layer_kinds(cfg)[n_groups * len(pat):]
+
+    def one(kind):
+        if kind == "attn":
+            kv_len = min(max_len, cfg.window) if cfg.window else max_len
+            shp = (batch, kv_len, cfg.n_kv_heads, cfg.hd)
+            if quantized:
+                z = {"int8_q": jnp.zeros(shp, jnp.int8),
+                     "int8_s": jnp.zeros(shp[:-1] + (1,), jnp.float32)}
+                return {"k": dict(z),
+                        "v": {k: jnp.copy(v) for k, v in z.items()}}
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if kind == "rec":
+            return rglru_init_state(batch, cfg.d_model, dtype)
+        if kind == "rwkv":
+            return rwkv_init_state(batch, cfg.d_model, cfg.rwkv_head_dim)
+        raise ValueError(kind)
+
+    out: Dict = {}
+    if n_groups:
+        out["groups"] = {
+            f"b{i}_{kind}": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one(kind))
+            for i, kind in enumerate(pat)}
+    if tail_kinds:
+        out["tail"] = [{f"b0_{kind}": one(kind)} for kind in tail_kinds]
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
+                fi: Optional[FaultConfig] = None):
+    """One decode step.  token: (B, 1) int32; cache_len includes this token.
+
+    For windowed attention the cache is ring-indexed by the caller keeping
+    ``cache_len <= window`` (the serve engine rolls it); here we index
+    directly — correct for cache_len within capacity.
+    """
+    x = embed_tokens(params, cfg, token, with_prefix=False)
+    positions = jnp.full((1, 1), cache_len - 1, jnp.int32)
+    x, new_cache, _ = _run_blocks(x, params, cfg, positions=positions,
+                                  states=cache, cache_len=cache_len, fi=fi)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return unembed(params, cfg, x), new_cache

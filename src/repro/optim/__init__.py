@@ -1,0 +1,6 @@
+"""Pure-JAX optimizer substrate."""
+from .adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                    cosine_schedule, global_norm)
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm"]

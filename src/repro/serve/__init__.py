@@ -1,0 +1,5 @@
+"""Serving layer: prefill/decode steps and the aging-aware engine."""
+from .steps import make_decode_step, make_prefill_step
+from .engine import ServeEngine
+
+__all__ = ["make_decode_step", "make_prefill_step", "ServeEngine"]

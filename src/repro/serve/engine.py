@@ -1,0 +1,143 @@
+"""Aging-aware serving engine — the paper's technique as a runtime feature.
+
+The engine owns an :class:`repro.core.runtime.AgingAwareRuntime`: one AVS
+voltage domain per operator class (the paper's Table II rows).  Before each
+generation call it snapshots the runtime's current per-operator BERs into a
+:class:`FaultConfig`, so every matmul executes at exactly the error rate the
+fault-tolerant AVS policy admits at the device's current age.  Advancing the
+simulated age between calls re-jits nothing: the BERs enter as traced
+scalars.
+
+Serving model: static-batch generate (prefill the prompt batch, then decode
+step-by-step with an in-place KV cache).  Continuous batching slots are
+deliberately out of scope — the paper's contribution is below the batching
+policy layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.runtime import AgingAwareRuntime
+from repro.models.layers import FaultConfig
+from . import steps
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray           # (B, steps) generated ids
+    bers: Dict[str, float]       # per-operator BER used
+    age_years: float
+    power_w: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 runtime: Optional[AgingAwareRuntime] = None,
+                 max_len: int = 512, use_systolic_kernel: bool = False,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.runtime = runtime
+        self.max_len = max_len
+        self.use_kernel = use_systolic_kernel
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = None
+        self._decode = None
+
+    # ------------------------------------------------------------------ #
+    def _fault_config(self) -> Optional[FaultConfig]:
+        if self.runtime is None:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        bers = {op: jnp.float32(ber)
+                for op, ber in self.runtime.op_bers().items()}
+        return FaultConfig(bers=bers, key=sub,
+                           use_systolic_kernel=self.use_kernel)
+
+    def _build(self, fi: Optional[FaultConfig]):
+        cfg = self.cfg
+        # faulted graphs close over `fi` arrays -> pass them as args via
+        # closure-conversion: jit once per (faulted?) flavour
+        pre = steps.make_prefill_step(cfg, self.max_len, fi)
+        dec = steps.make_decode_step(cfg, fi)
+        return jax.jit(pre), jax.jit(dec)
+
+    # ------------------------------------------------------------------ #
+    def generate(self, prompts: np.ndarray, n_steps: int, *,
+                 prefix_embeds=None, frames=None,
+                 greedy: bool = True) -> GenerateResult:
+        """prompts: (B, S) int32.  Returns ``n_steps`` generated tokens."""
+        cfg = self.cfg
+        fi = self._fault_config()
+        prefill, decode = self._build(fi)
+
+        B, S = prompts.shape
+        prompts = jnp.asarray(prompts, jnp.int32)
+        extra_kv = None
+        if cfg.n_encoder_layers:
+            assert frames is not None
+            logits, cache, extra_kv = prefill(self.params, prompts, frames)
+        elif cfg.prefix_tokens:
+            assert prefix_embeds is not None
+            logits, cache = prefill(self.params, prompts, prefix_embeds)
+        else:
+            logits, cache = prefill(self.params, prompts)
+
+        out = []
+        cache_len = S + cfg.prefix_tokens
+        tok = self._pick(logits, greedy)
+        out.append(np.asarray(tok))
+        for i in range(1, n_steps):
+            cache_len += 1
+            if cfg.n_encoder_layers:
+                logits, cache = decode(self.params, tok[:, None], cache,
+                                       jnp.asarray(cache_len, jnp.int32),
+                                       extra_kv)
+            else:
+                logits, cache = decode(self.params, tok[:, None], cache,
+                                       jnp.asarray(cache_len, jnp.int32))
+            tok = self._pick(logits, greedy)
+            out.append(np.asarray(tok))
+
+        bers = (self.runtime.op_bers() if self.runtime else {})
+        return GenerateResult(
+            tokens=np.stack(out, axis=1),
+            bers={k: float(v) for k, v in bers.items()},
+            age_years=self.runtime.age_years if self.runtime else 0.0,
+            power_w=self.runtime.total_power() if self.runtime else 0.0,
+        )
+
+    def _pick(self, logits, greedy: bool):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+    # ------------------------------------------------------------------ #
+    def score(self, tokens: np.ndarray, *, prefix_embeds=None,
+              frames=None) -> float:
+        """Mean next-token NLL of a token batch under the aged device."""
+        from repro.models import encdec
+        from repro.models import transformer as tf
+        from repro.train.steps import softmax_xent
+        cfg = self.cfg
+        fi = self._fault_config()
+        tokens = jnp.asarray(tokens, jnp.int32)
+        inp, lab = tokens[:, :-1], tokens[:, 1:]
+        if cfg.n_encoder_layers:
+            enc = encdec.encode(self.params, cfg, frames, fi=fi)
+            logits, _ = encdec.decode(self.params, cfg, inp, enc_out=enc,
+                                      fi=fi)
+        else:
+            logits, _, _ = tf.forward_logits(self.params, cfg, inp,
+                                             prefix_embeds=prefix_embeds,
+                                             fi=fi)
+            if cfg.prefix_tokens:
+                logits = logits[:, cfg.prefix_tokens:]
+        return float(softmax_xent(logits, lab))

@@ -1,0 +1,72 @@
+"""Serve-step builders: prefill (full-sequence) and decode (one token).
+
+These are the functions the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` shape cells, and the engine jits for real serving.
+``decode_step`` consumes/produces the KV-cache pytree whose shardings come
+from ``repro.distributed.sharding.cache_specs`` (sequence-sharded over
+"model" when KV heads cannot split — partial-softmax decode attention).
+
+Fault injection: ``fi`` (a ``repro.models.layers.FaultConfig``) threads the
+per-operator BERs from the AVS runtime into every matmul domain.  ``fi=None``
+lowers the clean graph (what the roofline measures).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import encdec
+from repro.models import transformer as tf
+from repro.models.layers import FaultConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      fi: Optional[FaultConfig] = None) -> Callable:
+    """(params, tokens[, prefix_embeds/frames]) -> (logits_last, cache).
+
+    The cache is allocated at ``max_len`` so subsequent decode steps reuse
+    it in place.
+    """
+    if cfg.n_encoder_layers:
+        def prefill(params, tokens, frames):
+            B = tokens.shape[0]
+            enc = encdec.encode(params, cfg, frames, fi=fi)
+            kv = encdec.cross_kv(params, cfg, enc, fi=fi)
+            cache = encdec.init_cache(cfg, B, max_len)
+            logits, _ = encdec.decode(params, cfg, tokens, kv=kv, fi=fi)
+            return logits[:, -1], cache, kv
+        return prefill
+
+    def prefill(params, tokens, prefix_embeds=None):
+        B, S = tokens.shape
+        cache = tf.init_cache(cfg, B, max_len)
+        kwargs = {}
+        if cfg.prefix_tokens:
+            kwargs["prefix_embeds"] = prefix_embeds
+        logits, cache, _ = tf.forward_logits(
+            params, cfg, tokens, states=cache,
+            cache_len=jnp.asarray(S + cfg.prefix_tokens, jnp.int32),
+            fi=fi, **kwargs)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig,
+                     fi: Optional[FaultConfig] = None) -> Callable:
+    """(params, token (B,1), cache, cache_len) -> (logits (B,V), cache)."""
+    if cfg.n_encoder_layers:
+        def decode(params, token, cache, cache_len, kv):
+            logits, new_cache = encdec.decode(
+                params, cfg, token, kv=kv, fi=fi, cache=cache,
+                cache_len=cache_len, pos_offset=cache_len - 1)
+            return logits[:, -1], new_cache
+        return decode
+
+    def decode(params, token, cache, cache_len):
+        logits, new_cache = tf.decode_step(params, cfg, token, cache,
+                                           cache_len, fi=fi)
+        return logits[:, -1], new_cache
+    return decode

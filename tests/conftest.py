@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py fakes 512 devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end tests")
+    # Lock the backend to the real single CPU device BEFORE any test module
+    # imports repro.launch.dryrun (which sets XLA_FLAGS for ITS OWN process;
+    # jax ignores the env var once initialised).
+    assert len(jax.devices()) >= 1

@@ -1,0 +1,80 @@
+"""BER model (Sec. IV-A) and DNN resilience curves (Sec. IV-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.artifacts import load_calibration
+from repro.core.ber import DELAY_MAX_CAP
+from repro.core.constants import T_CLK
+from repro.core.resilience import (OPERATORS, default_curves, fit_curve,
+                                   tolerable_bers)
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+def test_ber_monotone_in_delay(cal):
+    ds = np.linspace(1.45e-9, 2.0e-9, 64)
+    bers = np.asarray([float(cal.ber.ber_from_delay(d)) for d in ds])
+    assert np.all(np.diff(bers) >= 0)
+
+
+def test_ber_negligible_with_slack(cal):
+    """Positive slack -> BER vanishes double-exponentially."""
+    assert float(cal.ber.ber_from_delay(1.45e-9)) < 1e-20
+
+
+@settings(max_examples=30, deadline=None)
+@given(logb=st.floats(-8.0, -5.0))
+def test_ber_inversion_roundtrip(logb):
+    cal = load_calibration()
+    ber = 10.0 ** logb
+    d = cal.ber.delay_max_for_ber(ber)
+    if d >= DELAY_MAX_CAP:        # threshold unreachable (tolerant op)
+        return
+    back = float(cal.ber.ber_from_delay(d))
+    assert np.log10(back) == pytest.approx(logb, abs=0.02)
+
+
+def test_tolerable_ber_heterogeneity():
+    """REALM-style heterogeneity [14]: sensitive ops (O, Down) orders of
+    magnitude below tolerant ones; full span within the 1e-7..1e-3 range."""
+    tols = tolerable_bers(max_loss_pct=0.5)
+    assert set(tols) == set(OPERATORS)
+    assert tols["o"] == min(tols.values())
+    assert tols["o"] < 1e-6
+    assert max(tols.values()) > 1e-4
+    for v in tols.values():
+        assert 1e-8 <= v <= 1e-2
+
+
+def test_resilience_curves_monotone():
+    for op, curve in default_curves().items():
+        losses = [curve.accuracy_loss(b) for b in (1e-9, 1e-7, 1e-5, 1e-3)]
+        assert all(np.diff(losses) >= -1e-12), op
+        assert losses[0] < 0.05                      # quasi-error-free floor
+
+
+def test_fit_curve_recovers_knee():
+    curve0 = default_curves()["down"]
+    bers = np.logspace(-9, -2, 40)
+    losses = np.asarray([curve0.accuracy_loss(b) for b in bers])
+    fit = fit_curve(bers, losses)
+    for b in (1e-7, 1e-5, 1e-4):
+        assert fit.accuracy_loss(b) == pytest.approx(
+            curve0.accuracy_loss(b), abs=3.0)   # grid fit; steep knee
+    # the policy-relevant quantity: tolerable BER within a factor of 2
+    assert fit.tolerable_ber(0.5) == pytest.approx(
+        curve0.tolerable_ber(0.5), rel=1.0)
+
+
+def test_policy_chain_ber_to_delay_consistency(cal):
+    """delay_max(tolerable_ber(op)) must admit no more than that BER."""
+    tols = tolerable_bers(max_loss_pct=0.5)
+    for op, tol in tols.items():
+        d = cal.ber.delay_max_for_ber(tol)
+        if d < DELAY_MAX_CAP:
+            admitted = float(cal.ber.ber_from_delay(d))
+            assert admitted <= tol * 1.1, op

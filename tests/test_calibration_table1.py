@@ -1,0 +1,86 @@
+"""Pins the aging framework against the paper's Table I (see DESIGN.md:
+rows 1-3 are calibration targets; row 4 — the AVS run — is a PREDICTION)."""
+import numpy as np
+import pytest
+
+from repro.core.artifacts import load_calibration
+from repro.core.avs import final_shifts, run_lifetime
+from repro.core.constants import T_CLK, V_MAX, V_NOM
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+def test_table1_calibration_rows(cal):
+    """Rows 1-3 were fit targets; they must still reproduce to <1%."""
+    chk = cal.raw["table1_check"]
+    targets = {
+        "nom_norec": dict(pmos_total=82.0, nmos=50.5, pmos_hci=19.8,
+                          pmos_bti=62.2),
+        "nom_rec": dict(pmos_total=73.1, nmos=46.1),
+        "vmax_norec": dict(pmos_total=130.7, nmos=105.2, pmos_hci=27.3,
+                           pmos_bti=103.4),
+    }
+    for row, vals in targets.items():
+        for k, v in vals.items():
+            assert chk[row][k] == pytest.approx(v, rel=0.01), (row, k)
+
+
+def test_table1_avs_prediction(cal):
+    """Row 4 (history-aware AVS) is *predicted*: PMOS 105.3, NMOS 85.1 mV.
+    Accept 5% — the paper's own identification of the reduction is ~19%."""
+    chk = cal.raw["table1_check"]["avs"]
+    assert chk["pmos_total"] == pytest.approx(105.3, rel=0.05)
+    assert chk["nmos"] == pytest.approx(85.1, rel=0.05)
+    assert chk["v_final"] == pytest.approx(V_MAX, abs=0.005)
+
+
+def test_avs_pessimism_reduction(cal):
+    """The headline claim: history-aware AVS estimate reduces DVth vs
+    constant-V_max by ~19.4% (PMOS) / ~19.1% (NMOS)."""
+    chk = cal.raw["table1_check"]
+    red_p = 1 - chk["avs"]["pmos_total"] / chk["vmax_norec"]["pmos_total"]
+    red_n = 1 - chk["avs"]["nmos"] / chk["vmax_norec"]["nmos"]
+    assert red_p == pytest.approx(0.194, abs=0.04)
+    assert red_n == pytest.approx(0.191, abs=0.04)
+
+
+def test_avs_trajectory_regenerates(cal):
+    """Re-run the lifetime simulator live: staircase 0.90 -> 1.02 V."""
+    traj = run_lifetime(cal.aging, cal.delay_poly, cal.lifetime_cfg,
+                        delay_max=cal.lifetime_cfg.t_clk)
+    fin = final_shifts(traj)
+    assert fin["v_final"] == pytest.approx(V_MAX, abs=0.005)
+    V = np.asarray(traj["V"])
+    assert V[0] == pytest.approx(V_NOM, abs=1e-6)
+    assert np.all(np.diff(V) >= -1e-9)            # monotone staircase
+    steps = np.count_nonzero(np.diff(V) > 1e-6)
+    assert steps == pytest.approx(12, abs=1)      # (1.02-0.90)/0.010
+
+
+def test_delay_polynomial_fit_quality(cal):
+    """Paper: ternary 6th-degree polynomial, RMSE 5.85e-5 ns << 1.5 ns."""
+    rmse = cal.raw["delay_poly"].get("rmse", None)
+    assert rmse is not None and rmse < 5e-3 * 1.542  # <0.5% of nominal
+    # nominal critical path at fresh, V_nom
+    d0 = float(cal.delay_poly(0.0, 0.0, V_NOM))
+    assert d0 == pytest.approx(1.542e-9, rel=0.01)
+    # delay increases with aging, decreases with voltage
+    assert float(cal.delay_poly(0.08, 0.05, V_NOM)) > d0
+    assert float(cal.delay_poly(0.0, 0.0, 1.0)) < d0
+
+
+def test_lifetime_vmapped_matches_scalar(cal):
+    import jax.numpy as jnp
+    dmax = jnp.asarray([T_CLK, T_CLK * 1.02])
+    trajs = run_lifetime(cal.aging, cal.delay_poly, cal.lifetime_cfg,
+                         delay_max=dmax)
+    scalar = run_lifetime(cal.aging, cal.delay_poly, cal.lifetime_cfg,
+                          delay_max=T_CLK)
+    np.testing.assert_allclose(np.asarray(trajs["V"])[0],
+                               np.asarray(scalar["V"]), rtol=1e-6)
+    # relaxed threshold -> final V no higher
+    assert float(np.asarray(trajs["V"])[1, -1]) <= \
+        float(np.asarray(trajs["V"])[0, -1]) + 1e-6

@@ -1,0 +1,179 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, train loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              load_checkpoint, save_checkpoint)
+from repro.data import SyntheticLM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm)
+from repro.train.loop import StragglerWatchdog
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_data_deterministic_and_stateless():
+    d = SyntheticLM(vocab=512, seq_len=64, global_batch=8, seed=3)
+    b1, b2 = d.batch_at(17), d.batch_at(17)
+    np.testing.assert_array_equal(b1.tokens, b2.tokens)
+    assert not np.array_equal(d.batch_at(18).tokens, b1.tokens)
+    # next-token alignment
+    np.testing.assert_array_equal(b1.tokens[:, 1:], b1.labels[:, :-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_shards=st.sampled_from([1, 2, 4, 8]), step=st.integers(0, 1000))
+def test_data_shards_partition_global_batch(n_shards, step):
+    """Sharded reads concatenate to exactly the global batch — the property
+    elastic re-meshing relies on."""
+    d = SyntheticLM(vocab=100, seq_len=16, global_batch=8, seed=1)
+    glob = d.batch_at(step)
+    parts = [d.local_batch_at(step, s, n_shards) for s in range(n_shards)]
+    np.testing.assert_array_equal(
+        np.concatenate([p.tokens for p in parts], axis=0), glob.tokens)
+
+
+def test_data_tokens_in_range_and_learnable():
+    d = SyntheticLM(vocab=64, seq_len=256, global_batch=4)
+    b = d.batch_at(0)
+    assert b.tokens.min() >= 0 and b.tokens.max() < 64
+    # the affine recurrence makes the next token a function of the previous:
+    # verify the generative rule holds away from document resets
+    toks = np.concatenate([b.tokens, b.labels[:, -1:]], axis=1)
+    nxt = (d.a_mult * toks[:, :-1] + 1) % d.vocab
+    diff = (toks[:, 1:] - nxt) % d.vocab
+    interior = np.arange(1, toks.shape[1]) % d.doc_len != 0
+    assert np.all(diff[:, interior[: diff.shape[1]]] < d.noise_vocab)
+    assert d.oracle_nll() < d.uniform_nll()
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, clip_norm=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2.0 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_clip_and_metrics():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, total_steps=10)
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw_init(params)
+    big = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    _, opt2, m = adamw_update(big, opt, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+    # clipped: first-moment update bounded by (1-b1)*clip
+    assert float(jnp.abs(opt2.mu["w"][0])) <= 0.1 + 1e-6
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100, 200)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+    assert lrs[5] == pytest.approx(0.1, rel=1e-3)
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing
+# --------------------------------------------------------------------------- #
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    base = str(tmp_path / "ckpt")
+    save_checkpoint(base, 123, _tree(), metadata={"loss": 1.5})
+    assert latest_step(base) == 123
+    loaded, meta = load_checkpoint(base, 123, jax.eval_shape(_tree))
+    np.testing.assert_array_equal(np.asarray(loaded["params"]["w"]),
+                                  np.asarray(_tree()["params"]["w"]))
+    assert meta["loss"] == 1.5
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A crash mid-save (tmp dir without COMMIT) must be invisible."""
+    base = str(tmp_path / "ckpt")
+    save_checkpoint(base, 1, _tree())
+    # simulate a torn save at step 2
+    os.makedirs(os.path.join(base, "step_00000002.tmp0"))
+    bad = os.path.join(base, "step_00000002")
+    os.makedirs(bad)                        # renamed but no COMMIT
+    assert latest_step(base) == 1
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(base, 2, jax.eval_shape(_tree))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    base = str(tmp_path / "ckpt")
+    save_checkpoint(base, 5, _tree())
+    wrong = {"params": {"w": jnp.zeros((3, 3))}, "step": jnp.asarray(0)}
+    with pytest.raises(ValueError):
+        load_checkpoint(base, 5, jax.eval_shape(lambda: wrong))
+
+
+def test_manager_async_save_and_gc(tmp_path):
+    base = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(base, keep=2, save_every=10)
+    for step in (10, 20, 30):
+        mgr.save(step, _tree(), blocking=False)
+    mgr.wait()
+    assert latest_step(base) == 30
+    kept = sorted(n for n in os.listdir(base) if n.startswith("step_"))
+    assert len(kept) == 2                      # GC keeps newest 2
+    assert mgr.should_save(40) and not mgr.should_save(41)
+
+
+def test_manager_restore_or_init(tmp_path):
+    base = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(base, keep=2, save_every=1)
+    init = _tree
+    state, start = mgr.restore_or_init(init)
+    assert start == 0
+    mgr.save(42, state)
+    state2, start2 = mgr.restore_or_init(init)
+    assert start2 == 42
+    np.testing.assert_array_equal(np.asarray(state2["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+# --------------------------------------------------------------------------- #
+# straggler watchdog
+# --------------------------------------------------------------------------- #
+def test_watchdog_detects_persistent_straggler():
+    wd = StragglerWatchdog(window=16, threshold=2.0, consecutive=3)
+    actions = []
+    for step in range(20):
+        actions.append(wd.observe(step, 0.1))
+    assert all(a is None for a in actions)
+    # one transient spike -> warn; three consecutive -> rebalance
+    assert wd.observe(20, 0.5) == "warn"
+    assert wd.observe(21, 0.5) == "warn"
+    assert wd.observe(22, 0.5) == "rebalance"
+    # recovery resets the counter
+    assert wd.observe(23, 0.1) is None
+    assert wd.observe(24, 0.5) == "warn"
+    assert [e.action for e in wd.events].count("rebalance") == 1

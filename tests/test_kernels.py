@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per the brief; hypothesis drives the shape space for
+the padding logic of the public wrappers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bitflip import bitflip_words
+from repro.kernels.systolic_matmul import systolic_matmul
+
+
+# --------------------------------------------------------------------------- #
+# systolic int8 matmul
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,n", [(256, 256, 256), (256, 512, 256),
+                                   (512, 256, 768)])
+@pytest.mark.parametrize("bm,bn,bk", [(256, 256, 256), (128, 128, 128)])
+def test_systolic_matmul_block_aligned(m, k, n, bm, bn, bk):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m + k + n))
+    a = jax.random.randint(ka, (m, k), -128, 128, jnp.int8)
+    b = jax.random.randint(kb, (k, n), -128, 128, jnp.int8)
+    out = systolic_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.systolic_matmul_ref(a, b)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
+def test_quantized_matmul_arbitrary_shapes(m, k, n):
+    """Public wrapper pads arbitrary shapes to hardware blocks."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n))
+    a = jax.random.randint(ka, (m, k), -128, 128, jnp.int8)
+    b = jax.random.randint(kb, (k, n), -128, 128, jnp.int8)
+    out = ops.quantized_matmul(a, b, interpret=True)
+    assert out.shape == (m, n) and out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.systolic_matmul_ref(a, b)))
+
+
+def test_systolic_matmul_accumulator_width():
+    """Worst-case int8 dot must not overflow int32 (the paper's 32-bit
+    accumulator): 127*127*K for K=2048 ~ 3.3e7 << 2^31."""
+    K = 2048
+    a = jnp.full((128, K), 127, jnp.int8)
+    b = jnp.full((K, 128), 127, jnp.int8)
+    out = ops.quantized_matmul(a, b, interpret=True)
+    assert int(out[0, 0]) == 127 * 127 * K
+
+
+# --------------------------------------------------------------------------- #
+# bitflip injection
+# --------------------------------------------------------------------------- #
+def test_bitflip_kernel_matches_oracle():
+    R = 512
+    x = jax.random.randint(jax.random.PRNGKey(0), (R, 128), -2**30, 2**30,
+                           jnp.int32)
+    u, pos = ops.make_flip_randoms(jax.random.PRNGKey(1), (R, 128))
+    q = jnp.asarray([0.3], jnp.float32)
+    out = bitflip_words(x, u, pos, q, interpret=True)
+    exp = ref.bitflip_words_ref(x, u, pos, q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("ber,shape", [(1e-3, (1000, 64)), (1e-2, (64, 257)),
+                                       (0.0, (33,))])
+def test_inject_bitflips_statistics(ber, shape):
+    x = jax.random.randint(jax.random.PRNGKey(2), shape, -2**20, 2**20,
+                           jnp.int32)
+    y = ops.inject_bitflips(x, ber, jax.random.PRNGKey(3), interpret=True)
+    assert y.shape == x.shape
+    rate = float(jnp.mean(y != x))
+    q = 1 - (1 - ber) ** 32
+    n = int(np.prod(shape))
+    tol = 4 * np.sqrt(max(q * (1 - q), 1e-12) / n)
+    assert abs(rate - q) <= tol + 1e-9, (rate, q)
+
+
+def test_inject_bitflips_flips_single_bit():
+    x = jnp.zeros((4096,), jnp.int32)
+    y = ops.inject_bitflips(x, 0.05, jax.random.PRNGKey(4), interpret=True)
+    changed = np.asarray(y)[np.asarray(y != x)]
+    # exactly one bit set per corrupted word
+    assert all(bin(int(w) & 0xFFFFFFFF).count("1") == 1 for w in changed)
+
+
+def test_inject_bitflips_deterministic():
+    x = jax.random.randint(jax.random.PRNGKey(5), (256, 64), -100, 100,
+                           jnp.int32)
+    y1 = ops.inject_bitflips(x, 1e-2, jax.random.PRNGKey(6), interpret=True)
+    y2 = ops.inject_bitflips(x, 1e-2, jax.random.PRNGKey(6), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# --------------------------------------------------------------------------- #
+# aged_linear (the model-facing op)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aged_linear_clean_quantization_error(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 64, 96), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(8), (96, 128), dtype)
+    out = ops.aged_linear(x, w, ber=0.0, key=None, use_kernel=True,
+                          interpret=True)
+    exact = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    rel = float(jnp.linalg.norm(out.astype(jnp.float32) - exact)
+                / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel           # int8 quantisation noise only
+
+
+def test_aged_linear_ber_increases_error():
+    x = jax.random.normal(jax.random.PRNGKey(9), (32, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(10), (128, 64), jnp.float32)
+    exact = x @ w
+    errs = []
+    for ber in (0.0, 1e-4, 1e-2):
+        out = ops.aged_linear(x, w, ber=ber, key=jax.random.PRNGKey(11),
+                              use_kernel=False)
+        errs.append(float(jnp.linalg.norm(out - exact)))
+    assert errs[0] <= errs[1] <= errs[2]
+    assert errs[2] > 2 * errs[0]
+
+
+def test_quantize_int8_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(12), (64, 256), jnp.float32)
+    q, scale = ops.quantize_int8(x)
+    err = jnp.abs(q.astype(jnp.float32) * scale - x)
+    assert float(jnp.max(err / jnp.maximum(scale, 1e-9))) <= 0.5 + 1e-3

@@ -1,0 +1,173 @@
+"""Per-arch smoke tests: reduced config, forward + one train step on CPU,
+shape + finiteness assertions (deliverable (f)), plus prefill/decode cache
+consistency — the correctness backbone for the serving path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import encdec
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def _batch_for(cfg, B=2, S=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+    }
+    if cfg.prefix_tokens:
+        batch["prefix_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.n_encoder_layers:
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(total_steps=10)))
+    batch = _batch_for(cfg)
+    state2, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    assert loss == pytest.approx(np.log(cfg.vocab), rel=0.35)  # fresh model
+    # params actually moved
+    delta = jax.tree.reduce(
+        jnp.add, jax.tree.map(
+            lambda a, b: jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                         - b.astype(jnp.float32))),
+            state.params, state2.params))
+    assert float(delta) > 0
+    # a second step keeps everything finite
+    _, m3 = step(state2, _batch_for(cfg, key=1))
+    assert np.isfinite(float(m3["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_full_config_dims(arch):
+    """The full (un-reduced) configs carry the exact dims from the brief."""
+    cfg = get_config(arch)
+    expected = {
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+        "deepseek_7b": (30, 4096, 32, 32, 11008, 102400),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "rwkv6_3b": (32, 2560, 0, 0, 8960, 65536),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+        "llama3_8b": (32, 4096, 32, 8, 14336, 128256),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+    if arch == "arctic_480b":
+        assert cfg.moe and cfg.moe.n_experts == 128 and cfg.moe.top_k == 2 \
+            and cfg.moe.dense_residual
+    if arch == "qwen3_moe_235b":
+        assert cfg.moe and cfg.moe.n_experts == 128 and cfg.moe.top_k == 8
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "recurrentgemma_2b",
+                                  "rwkv6_3b", "paligemma_3b", "granite_20b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """logits(prefill S then decode token S+1) == logits(forward on S+1) —
+    validates KV caches, ring buffers and recurrent state carry."""
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab)
+    pe = (jax.random.normal(jax.random.PRNGKey(2),
+                            (B, cfg.prefix_tokens, cfg.d_model))
+          if cfg.prefix_tokens else None)
+
+    full, _, _ = tf.forward_logits(params, cfg, toks, prefix_embeds=pe)
+
+    cache = tf.init_cache(cfg, B, S + 8 + cfg.prefix_tokens,
+                          dtype=jnp.float32)
+    pre, cache, _ = tf.forward_logits(
+        params, cfg, toks[:, :S], prefix_embeds=pe, states=cache,
+        cache_len=jnp.asarray(S + cfg.prefix_tokens, jnp.int32))
+    np.testing.assert_allclose(np.asarray(pre[:, -1]),
+                               np.asarray(full[:, S - 1 + cfg.prefix_tokens]),
+                               rtol=2e-4, atol=2e-4)
+
+    logits, cache = tf.decode_step(
+        params, cfg, toks[:, S:S + 1], cache,
+        jnp.asarray(S + 1 + cfg.prefix_tokens, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, S + cfg.prefix_tokens]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_decode_ring_buffer():
+    """RecurrentGemma local attention: decoding past the window must match
+    the full forward (ring-buffer cache)."""
+    cfg = get_config("recurrentgemma_2b").reduced()   # window 16
+    params = tf.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S_total = 1, 28                                # crosses window=16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S_total), 0,
+                              cfg.vocab)
+    full, _, _ = tf.forward_logits(params, cfg, toks)
+
+    S0 = 8
+    cache = tf.init_cache(cfg, B, 64, dtype=jnp.float32)
+    _, cache, _ = tf.forward_logits(params, cfg, toks[:, :S0], states=cache,
+                                    cache_len=jnp.asarray(S0, jnp.int32))
+    logits = None
+    for t in range(S0, S_total):
+        logits, cache = tf.decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                       jnp.asarray(t + 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, -1]), rtol=5e-4, atol=5e-4)
+
+
+def test_whisper_encdec_teacher_forcing_and_decode():
+    cfg = get_config("whisper_large_v3").reduced()
+    params = encdec.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 10
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (B, cfg.encoder_seq, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    enc = encdec.encode(params, cfg, frames)
+    assert np.isfinite(np.asarray(enc)).all()
+    full, _ = encdec.decode(params, cfg, toks, enc_out=enc)
+    assert full.shape == (B, S + 1, cfg.vocab)
+
+    kv = encdec.cross_kv(params, cfg, enc)
+    cache = encdec.init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    _, pre_cache = encdec.decode(params, cfg, toks[:, :S], kv=kv)
+    # teacher-forced prefix then single-step decode
+    logits_step = None
+    cache_len = 0
+    for t in range(S + 1):
+        logits_step, cache = encdec.decode(
+            params, cfg, toks[:, t:t + 1], kv=kv, cache=cache,
+            cache_len=jnp.asarray(t + 1, jnp.int32), pos_offset=t)
+    np.testing.assert_allclose(np.asarray(logits_step[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_and_balance():
+    """MoE dispatch drops overflow tokens to the residual path and the aux
+    loss is minimised by a uniform router."""
+    from repro.configs import MoEConfig
+    from repro.models.moe import moe_apply, moe_init
+    moe = MoEConfig(n_experts=4, top_k=2, capacity_factor=1.0)
+    d, f = 32, 64
+    p = moe_init(jax.random.PRNGKey(0), d, f, moe, "gated", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d))
+    out, aux = moe_apply(x, p, moe, "gated")
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 1.0 - 1e-3   # n_experts * sum(me*ce) >= 1 always

@@ -1,0 +1,96 @@
+"""Fault-tolerant voltage scaling (paper Sec. IV / Table II)."""
+import numpy as np
+import pytest
+
+from repro.core.artifacts import load_calibration
+from repro.core.policy import (BaselinePolicy, FaultTolerantPolicy,
+                               evaluate_policy)
+from repro.core.resilience import OPERATORS
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+@pytest.fixture(scope="module")
+def results(cal):
+    pol = FaultTolerantPolicy(ber_model=cal.ber)
+    return evaluate_policy(pol, cal.aging, cal.delay_poly, cal.power,
+                           cal.lifetime_cfg)
+
+
+# Paper Table II:  op -> (V_final, dvp, dvn, power saving %)
+TABLE2 = {
+    "q":    (0.90, 73.1, 46.1, 17.0),
+    "k":    (0.94, 79.0, 52.1, 14.3),
+    "v":    (0.90, 73.1, 46.1, 17.0),
+    "qkt":  (0.90, 73.1, 46.1, 17.0),
+    "sv":   (0.90, 73.1, 46.1, 17.0),
+    "o":    (1.01, 99.7, 77.8, 3.1),
+    "gate": (0.90, 73.1, 46.1, 17.0),
+    "up":   (0.90, 73.1, 46.1, 17.0),
+    "down": (0.99, 90.8, 66.7, 7.8),
+}
+
+
+def test_final_voltages_match_table2(results):
+    for op, (vf, *_rest) in TABLE2.items():
+        assert results[op]["v_final"] == pytest.approx(vf, abs=0.015), op
+
+
+def test_vth_shifts_match_table2(results):
+    for op, (_vf, dvp, dvn, _s) in TABLE2.items():
+        assert results[op]["dvp_final"] == pytest.approx(dvp, rel=0.05), op
+        assert results[op]["dvn_final"] == pytest.approx(dvn, rel=0.13), op
+
+
+def test_power_savings_match_table2(results):
+    for op, (*_x, saving) in TABLE2.items():
+        assert results[op]["power_saving_pct"] == \
+            pytest.approx(saving, abs=2.5), op
+    assert results["avg_power_saving_pct"] == pytest.approx(14.0, abs=2.0)
+
+
+def test_max_aging_reduction_claims(results):
+    """Up to 30.6% (PMOS) / 45.8% (NMOS) DVth reduction vs baseline."""
+    base = results["baseline"]
+    best_p = min(results[op]["dvp_final"] for op in TABLE2)
+    best_n = min(results[op]["dvn_final"] for op in TABLE2)
+    red_p = 1 - best_p / base["dvp_final"]
+    red_n = 1 - best_n / base["dvn_final"]
+    assert red_p == pytest.approx(0.306, abs=0.05)
+    assert red_n == pytest.approx(0.458, abs=0.06)
+
+
+def test_sensitive_ops_get_tighter_thresholds(cal):
+    """Paper: O and Down are the most error-sensitive -> smallest delay_max;
+    the tolerant group never reaches its threshold."""
+    pol = FaultTolerantPolicy(ber_model=cal.ber)
+    dmax = pol.delay_max()
+    assert dmax["o"] == min(dmax.values())
+    assert dmax["down"] < dmax["k"] < dmax["q"]
+    for op in ("q", "v", "qkt", "sv", "gate", "up"):
+        assert dmax[op] == max(dmax.values())
+
+
+def test_baseline_policy_is_tclk_everywhere(cal):
+    dmax = BaselinePolicy().delay_max()
+    assert set(dmax) == set(OPERATORS)
+    assert all(v == cal.lifetime_cfg.t_clk for v in dmax.values())
+
+
+def test_accuracy_budget_scales_policy(cal):
+    """A larger admissible accuracy loss must never tighten thresholds."""
+    d_small = FaultTolerantPolicy(ber_model=cal.ber,
+                                  max_loss_pct=0.1).delay_max()
+    d_large = FaultTolerantPolicy(ber_model=cal.ber,
+                                  max_loss_pct=2.0).delay_max()
+    for op in d_small:
+        assert d_large[op] >= d_small[op] - 1e-15
+
+
+def test_deferring_never_increases_power(results):
+    base_p = results["baseline"]["p_avg"]
+    for op in TABLE2:
+        assert results[op]["p_avg"] <= base_p + 1e-9

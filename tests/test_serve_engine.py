@@ -1,0 +1,141 @@
+"""Aging-aware serving engine + AVS runtime integration (Sec. IV as a
+framework feature)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.runtime import AgingAwareRuntime
+from repro.data import SyntheticLM
+from repro.serve.engine import ServeEngine
+from repro.train.steps import init_train_state
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("deepseek_7b").reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=48, global_batch=4)
+    return cfg, params, data
+
+
+def test_runtime_domains_age_monotonically():
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    prev = {}
+    for years in (0.5, 3.0, 9.9):
+        rt.set_age(years=years)
+        for op in ("q", "o", "down"):
+            st = rt.domain_state(op)
+            assert st.dvth_p_mv >= prev.get(op, 0.0)
+            prev[op] = st.dvth_p_mv
+            assert 0.9 - 1e-6 <= st.v_dd <= 1.02 + 1e-6
+
+
+def test_runtime_fresh_device_error_free():
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    rt.set_age(years=0.02)
+    for op, ber in rt.op_bers().items():
+        assert ber < 1e-12, (op, ber)
+
+
+def test_runtime_policy_difference_late_life():
+    """Late in life the fault-tolerant runtime admits errors on tolerant
+    ops while the baseline runtime has boosted voltage instead."""
+    ft = AgingAwareRuntime(fault_tolerant=True)
+    bl = AgingAwareRuntime(fault_tolerant=False)
+    ft.set_age(years=9.5)
+    bl.set_age(years=9.5)
+    assert ft.op_ber("q") > bl.op_ber("q")
+    assert ft.domain_state("q").v_dd < bl.domain_state("q").v_dd
+    assert ft.total_power() < bl.total_power()
+
+
+def test_generate_shapes_and_determinism(setup):
+    cfg, params, data = setup
+    eng = ServeEngine(cfg, params, runtime=None, max_len=96, seed=7)
+    prompts = data.batch_at(0).tokens[:, :24]
+    r1 = eng.generate(prompts, 6)
+    r2 = ServeEngine(cfg, params, runtime=None, max_len=96,
+                     seed=7).generate(prompts, 6)
+    assert r1.tokens.shape == (4, 6)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)  # greedy + clean
+    assert (r1.tokens >= 0).all() and (r1.tokens < cfg.vocab).all()
+
+
+@pytest.mark.slow
+def test_trained_model_ber_knee():
+    """Fig. 1(b) structure on a model we actually train: flat NLL in the
+    quasi-error-free regime, collapse past the knee.  (On an *untrained*
+    model bit noise pushes logits toward uniform and can even lower NLL —
+    the knee only exists once there is structure to destroy.)"""
+    import jax.numpy as jnp
+    from repro.models import transformer as tf
+    from repro.models.layers import FaultConfig
+    from repro.optim import AdamWConfig
+    from repro.train.steps import (init_train_state, make_train_step,
+                                   softmax_xent)
+
+    cfg = get_config("deepseek_7b").reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=16)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, total_steps=60, warmup_steps=5)))
+    for i in range(60):
+        tb = data.batch_at(i)
+        state, m = step(state, {"tokens": jnp.asarray(tb.tokens),
+                                "labels": jnp.asarray(tb.labels)})
+    assert float(m["loss"]) < data.uniform_nll() - 0.3   # actually learned
+
+    toks = data.batch_at(100).tokens
+
+    def nll(ber, seed=0):
+        fi = None if ber is None else FaultConfig(
+            bers={op: jnp.float32(ber) for op in
+                  ("q", "k", "v", "qkt", "sv", "o", "gate", "up", "down")},
+            key=jax.random.PRNGKey(seed), use_systolic_kernel=False)
+        logits, _, _ = tf.forward_logits(state.params, cfg,
+                                         jnp.asarray(toks[:, :-1]), fi=fi)
+        return float(softmax_xent(logits, jnp.asarray(toks[:, 1:])))
+
+    clean = nll(0.0)
+    policy_level = np.mean([nll(1e-5, s) for s in range(2)])
+    broken = np.mean([nll(1e-2, s) for s in range(2)])
+    assert abs(policy_level - clean) < 0.2       # quasi-error-free regime
+    assert broken > clean + 0.5                  # past the knee: collapse
+
+    # end-of-life engine integration stays finite
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    rt.set_age(years=9.5)
+    aged = ServeEngine(cfg, state.params, runtime=rt).score(toks)
+    assert np.isfinite(aged)
+
+
+def test_family_operator_sets():
+    """§Arch-applicability: attention-free families get their projection
+    domains — rwkv's r/g projections are injected, qkt/sv are absent."""
+    rt = AgingAwareRuntime.for_model(get_config("rwkv6_3b"))
+    rt.set_age(years=9.0)
+    bers = rt.op_bers()
+    assert "qkt" not in bers and "sv" not in bers
+    assert bers["r"] > 0 and bers["g"] > 0          # tolerant: errors admitted
+    assert bers["o"] < bers["r"]                    # output proj stays tight
+
+    rt2 = AgingAwareRuntime.for_model(get_config("qwen3_moe_235b"))
+    rt2.set_age(years=9.0)
+    assert "router" in rt2.op_bers()                # MoE adds the router row
+
+    rt3 = AgingAwareRuntime.for_model(get_config("recurrentgemma_2b"))
+    assert set(("r", "g", "qkt")) <= set(rt3.operators)   # hybrid: both
+
+
+def test_engine_uses_policy_bers(setup):
+    cfg, params, data = setup
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    rt.set_age(years=9.0)
+    eng = ServeEngine(cfg, params, runtime=rt, max_len=64)
+    res = eng.generate(data.batch_at(0).tokens[:2, :16], 4)
+    assert set(res.bers) == set(rt.operators)
+    # sensitive ops are throttled to lower admitted BER than tolerant ones
+    assert res.bers["o"] <= res.bers["q"]
+    assert res.age_years == pytest.approx(9.0)
+    assert res.power_w > 0
