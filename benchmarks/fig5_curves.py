@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core.artifacts import load_calibration
 from repro.core.policy import FaultTolerantPolicy, evaluate_policy
+from repro.core.scenario import Scenario
 from .common import check, table
 
 YEAR = 365.25 * 24 * 3600.0
@@ -23,7 +24,7 @@ def run() -> str:
     cal = load_calibration()
     res = evaluate_policy(FaultTolerantPolicy(ber_model=cal.ber),
                           cal.aging, cal.delay_poly, cal.power,
-                          cal.lifetime_cfg)
+                          Scenario.from_lifetime_config(cal.lifetime_cfg))
     years = (0.1, 1, 3, 5, 10)
     rows = []
     for name in ("baseline", "k", "o", "down", "q"):

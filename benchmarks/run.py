@@ -8,7 +8,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("table1", "table2", "fig5", "kernels", "fig1b", "roofline")
+SECTIONS = ("table1", "table2", "fig5", "scenarios", "kernels", "fig1b",
+            "roofline")
 
 
 def main():
@@ -28,6 +29,9 @@ def main():
     if "fig5" in want:
         from . import fig5_curves
         runners["fig5"] = fig5_curves.run
+    if "scenarios" in want:
+        from . import scenario_bench
+        runners["scenarios"] = scenario_bench.run
     if "kernels" in want:
         from . import kernel_bench
         runners["kernels"] = kernel_bench.run

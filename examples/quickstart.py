@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.artifacts import load_calibration
 from repro.core.policy import FaultTolerantPolicy, evaluate_policy
-from repro.core.runtime import AgingAwareRuntime
+from repro.core.fleet import FleetRuntime
 from repro.configs import get_config
 from repro.data import SyntheticLM
 from repro.serve.engine import ServeEngine
@@ -45,7 +45,7 @@ def main():
     # --- 3. aging-aware serving ----------------------------------------
     cfg = get_config("llama3_8b").reduced()
     params = init_train_state(cfg, jax.random.PRNGKey(0)).params
-    runtime = AgingAwareRuntime(fault_tolerant=True)
+    runtime = FleetRuntime(n_devices=1, policy="fault_tolerant")
     runtime.set_age(years=9.0)
     engine = ServeEngine(cfg, params, runtime=runtime, max_len=64)
 

@@ -8,14 +8,22 @@ Layers:
 * :mod:`repro.core.ber`        — delay_max -> BER mapping and inversion
 * :mod:`repro.core.resilience` — BER -> accuracy curves, per-operator tolerances
 * :mod:`repro.core.policy`     — baseline & fault-tolerant voltage-scaling policies
+* :mod:`repro.core.scenario`   — pytree Scenario (mission profile) batches
 * :mod:`repro.core.power`      — lifetime power / V_eff model
 * :mod:`repro.core.calibrate`  — one-shot calibration against the paper's Table I
-* :mod:`repro.core.runtime`    — serving-time integration (AgingDomain per operator)
+* :mod:`repro.core.fleet`      — vectorised FleetRuntime (N devices x O domains)
+* :mod:`repro.core.runtime`    — legacy single-device AgingAwareRuntime shim
 """
 from .aging import AgingParams, POPULATIONS  # noqa: F401
-from .avs import LifetimeConfig, run_lifetime, final_shifts  # noqa: F401
+from .scenario import (LifetimeTrajectory, Scenario, scenario_grid,  # noqa: F401
+                       stack_scenarios)
+from .avs import (LifetimeConfig, final_shifts, run_lifetime,  # noqa: F401
+                  simulate)
 from .delay import DelayPolynomial, PathModel, fit_delay_polynomial  # noqa: F401
 from .ber import BerModel, solve_ber_model  # noqa: F401
-from .power import PowerModel, lifetime_stats  # noqa: F401
-from .policy import BaselinePolicy, FaultTolerantPolicy, evaluate_policy  # noqa: F401
+from .power import PowerModel, batched_lifetime_stats, lifetime_stats  # noqa: F401
+from .policy import (BaselinePolicy, FaultTolerantPolicy, Policy,  # noqa: F401
+                     evaluate_policy, get_policy, register_policy,
+                     sweep_policy)
 from .resilience import OPERATORS, ResilienceCurve, tolerable_bers  # noqa: F401
+from .fleet import DeviceView, DomainState, FleetRuntime  # noqa: F401

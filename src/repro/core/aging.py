@@ -152,9 +152,23 @@ def hci_gamma(B: float, V: float, n: float, num: int = 256) -> float:
     return float(np.trapezoid(integrand, tgrid))
 
 
-def stress_rates(params: AgingParams, *, duty: float = DUTY_FACTOR,
-                 toggle: float = TOGGLE_RATE, t_clk: float = T_CLK,
-                 transition_time: float = TRANSITION_TIME,
+def hci_gamma_closed(B, V, n):
+    """Closed form of :func:`hci_gamma` for the linear ramp — pure JAX.
+
+    ``gamma = (1 - exp(-B*V/n)) / (B*V/n)``, with the ``x -> 0`` limit
+    handled so the expression stays traceable and NaN-free.  This is the
+    analytic value the numeric integral of :func:`hci_gamma` converges to,
+    and is what the traced simulator uses so that activity knobs can be
+    batched (vmapped) scenario axes.
+    """
+    x = jnp.asarray(B) * jnp.asarray(V) / jnp.asarray(n)
+    safe = jnp.maximum(x, 1e-6)
+    return jnp.where(x > 1e-6, -jnp.expm1(-safe) / safe, 1.0 - 0.5 * x)
+
+
+def stress_rates(params: AgingParams, *, duty=DUTY_FACTOR,
+                 toggle=TOGGLE_RATE, t_clk=T_CLK,
+                 transition_time=TRANSITION_TIME,
                  recovery: bool = True) -> jnp.ndarray:
     """Effective stress-seconds accrued per wall-clock second, per population.
 
@@ -164,24 +178,26 @@ def stress_rates(params: AgingParams, *, duty: float = DUTY_FACTOR,
     population's rate is scaled by its capture/emission balance factor
     ``R_i = act / (act + chi_i * (1 - act))`` where ``act`` is the fraction
     of time under stress for that mechanism.
+
+    Fully traceable: every activity knob (``duty``, ``toggle``, ``t_clk``,
+    ``transition_time``) may be a traced scalar, so the lifetime simulator
+    can compute rates *inside* the vmapped scan and batch over mission
+    profiles.  ``recovery`` stays a static Python bool.
     """
-    B = np.asarray(params.B, np.float64)
-    n = np.asarray(params.n, np.float64)
-    rates = np.zeros(N_POP)
-    for i in range(N_POP):
-        if IS_BTI[i]:
-            act = duty
-            base = duty
-        else:
-            gamma = hci_gamma(float(B[i]), V_NOM, float(n[i]))
-            act = toggle * transition_time / t_clk
-            base = gamma * (transition_time / t_clk) * toggle
-        if recovery:
-            chi = float(np.asarray(params.chi)[i])
-            r = act / (act + chi * (1.0 - act))
-            base = base * r
-        rates[i] = base
-    return jnp.asarray(rates, jnp.float32)
+    duty = jnp.asarray(duty, jnp.float32)
+    toggle = jnp.asarray(toggle, jnp.float32)
+    t_clk = jnp.asarray(t_clk, jnp.float32)
+    transition_time = jnp.asarray(transition_time, jnp.float32)
+    is_bti = jnp.asarray(IS_BTI)
+    # gamma is evaluated at V_NOM, as in the paper's accumulation formula:
+    # the transition ramp always spans 0 -> V_DD ~ V_NOM for rate purposes.
+    gamma = hci_gamma_closed(params.B, V_NOM, params.n)
+    act = jnp.where(is_bti, duty, toggle * transition_time / t_clk)
+    base = jnp.where(is_bti, duty,
+                     gamma * (transition_time / t_clk) * toggle)
+    if recovery:
+        base = base * act / (act + params.chi * (1.0 - act))
+    return base.astype(jnp.float32)
 
 
 def update_state(params: AgingParams, dv_mv: jnp.ndarray, V: jnp.ndarray,

@@ -3,13 +3,22 @@
 A ``lax.scan`` over a log-spaced time grid covering t0 .. 10 years.  Each
 step advances the six trap populations (history-aware effective-time update
 at the *current* V_DD), evaluates the fitted critical-path delay polynomial,
-and raises V_DD in ``V_STEP`` increments while the delay exceeds the policy's
+and raises V_DD in ``v_step`` increments while the delay exceeds the policy's
 ``delay_max`` (classical AVS: delay_max = t_clk; fault-tolerant AVS:
 per-operator delay_max from the tolerable-BER inversion).
 
-The whole simulator is jittable and ``vmap``-able over ``delay_max`` — the
-entire Table II (9 operator domains + baseline) runs as a single vmapped
-scan.
+The first-class entry point is :func:`simulate`: it takes a pytree
+:class:`~repro.core.scenario.Scenario` whose leaves (duty, toggle,
+temperature, clock, supply envelope, horizon, budget) may carry arbitrary
+broadcastable batch dimensions, plus a broadcastable ``delay_max`` threshold
+array, flattens the joint batch, and runs ONE vmapped scan over it — stress
+rates are computed inside the traced function, so *every* knob batches, not
+just the threshold.  A full scenario sweep (budgets x mission profiles x
+operator domains) is one trace/compile.
+
+:func:`run_lifetime` is the legacy shim over ``simulate`` (scalar config +
+``delay_max`` vector, dict-of-arrays trajectory); new code should call
+``simulate`` directly.
 """
 from __future__ import annotations
 
@@ -25,10 +34,13 @@ from .aging import AgingParams
 from .constants import (DUTY_FACTOR, LIFETIME_S, T_AMB, T_CLK, TOGGLE_RATE,
                         TRANSITION_TIME, V_MAX, V_NOM, V_STEP)
 from .delay import DelayPolynomial
+from .scenario import LifetimeTrajectory, Scenario
 
 
 @dataclasses.dataclass(frozen=True)
 class LifetimeConfig:
+    """Legacy scalar mission config; superseded by
+    :class:`repro.core.scenario.Scenario` (see DESIGN.md §Migration)."""
     t_clk: float = T_CLK
     v_init: float = V_NOM
     v_step: float = V_STEP
@@ -46,62 +58,105 @@ class LifetimeConfig:
         return np.logspace(np.log10(self.t_start), np.log10(self.lifetime_s),
                            self.n_steps)
 
+    def scenario(self, max_loss_pct: float = 0.5, **overrides) -> Scenario:
+        return Scenario.from_lifetime_config(self, max_loss_pct, **overrides)
+
+
+def _simulate_one(params: AgingParams, poly: DelayPolynomial, scn: Scenario,
+                  dmax, *, recovery: bool, avs_enabled: bool
+                  ) -> LifetimeTrajectory:
+    """One lifetime with scalar (possibly traced) scenario leaves."""
+    rates = aging.stress_rates(params, duty=scn.duty, toggle=scn.toggle,
+                               t_clk=scn.t_clk,
+                               transition_time=scn.transition_time,
+                               recovery=recovery)
+    tgrid = jnp.logspace(jnp.log10(jnp.asarray(scn.t_start, jnp.float32)),
+                         jnp.log10(jnp.asarray(scn.lifetime_s, jnp.float32)),
+                         scn.n_steps, dtype=jnp.float32)
+    dts = jnp.diff(tgrid, prepend=jnp.zeros((1,), jnp.float32))
+    dmax = jnp.asarray(dmax, jnp.float32)
+
+    def step(carry, dt):
+        dv, v = carry
+        dv = aging.update_state(params, dv, v, rates, dt, scn.t_amb)
+        dvp, dvn = aging.totals(dv)
+        delay0 = poly(dvp * 1e-3, dvn * 1e-3, v)
+
+        def boost_cond(state):
+            v_, d_, it = state
+            return ((d_ > dmax) & (v_ < scn.v_max - 1e-6)
+                    & (it < scn.max_boosts_per_step) & avs_enabled)
+
+        def boost(state):
+            v_, _, it = state
+            v_ = v_ + scn.v_step
+            return v_, poly(dvp * 1e-3, dvn * 1e-3, v_), it + 1
+
+        v, delay, _ = jax.lax.while_loop(
+            boost_cond, boost, (v, delay0, jnp.asarray(0)))
+        return (dv, v), {"V": v, "delay": delay, "dvp": dvp, "dvn": dvn,
+                         "dv": dv}
+
+    init = (jnp.zeros((aging.N_POP,), jnp.float32),
+            jnp.asarray(scn.v_init, jnp.float32))
+    _, out = jax.lax.scan(step, init, dts)
+    return LifetimeTrajectory(t=tgrid, V=out["V"], delay=out["delay"],
+                              dvp=out["dvp"], dvn=out["dvn"], dv=out["dv"])
+
+
+def simulate(params: AgingParams, poly: DelayPolynomial,
+             scenarios: Scenario, delay_max=None, *,
+             recovery: bool = True,
+             avs_enabled: bool = True) -> LifetimeTrajectory:
+    """Simulate lifetimes for a broadcastable batch of scenarios.
+
+    ``delay_max`` (defaults to ``scenarios.t_clk`` — classical AVS)
+    broadcasts against the scenario batch shape; e.g. a scenario batch of
+    shape ``(B1, B2, 1)`` against thresholds ``(B1, B2, O)`` sweeps every
+    operator domain of every scenario.  The joint batch is flattened and run
+    as ONE vmapped scan — a single trace/compile for any sweep shape.
+    Returns a :class:`LifetimeTrajectory` with ``batch_shape`` equal to the
+    joint broadcast shape.
+    """
+    if delay_max is None:
+        delay_max = scenarios.t_clk
+    delay_max = jnp.asarray(delay_max, jnp.float32)
+    batch = jnp.broadcast_shapes(scenarios.batch_shape, delay_max.shape)
+
+    if batch == ():
+        return _simulate_one(params, poly, scenarios, delay_max,
+                             recovery=recovery, avs_enabled=avs_enabled)
+
+    flat_scn = scenarios.broadcast_leaves(batch).reshape((-1,))
+    flat_dmax = jnp.broadcast_to(delay_max, batch).reshape(-1)
+
+    traj = jax.vmap(
+        lambda s, d: _simulate_one(params, poly, s, d, recovery=recovery,
+                                   avs_enabled=avs_enabled)
+    )(flat_scn, flat_dmax)
+    return traj.reshape(batch)
+
 
 def run_lifetime(params: AgingParams, poly: DelayPolynomial,
                  cfg: LifetimeConfig = LifetimeConfig(), *,
                  delay_max: float | jnp.ndarray = T_CLK,
                  recovery: bool = True,
                  avs_enabled: bool = True) -> Dict[str, Any]:
-    """Simulate one lifetime; returns the full trajectory.
+    """Legacy entry point: one scalar config, ``delay_max`` scalar/vector.
 
-    ``delay_max`` may be a scalar or a vector (vmapped policies).  With
-    ``avs_enabled=False`` the supply stays at ``v_init`` (Table I rows 1-2);
-    pass ``v_init == v_max`` for the constant-worst-case row 3.
+    Thin shim over :func:`simulate`; returns the historical dict-of-arrays
+    trajectory (``t, V, delay, dvp, dvn, dv``).  See DESIGN.md §Migration.
     """
-    rates = aging.stress_rates(params, duty=cfg.duty, toggle=cfg.toggle,
-                               t_clk=cfg.t_clk,
-                               transition_time=cfg.transition_time,
-                               recovery=recovery)
-    tgrid = jnp.asarray(cfg.time_grid(), jnp.float32)
-    dts = jnp.diff(tgrid, prepend=jnp.zeros((1,), jnp.float32))
-    delay_max = jnp.asarray(delay_max, jnp.float32)
-
-    def one_lifetime(dmax):
-        def step(carry, inp):
-            dv, v = carry
-            dt = inp
-            dv = aging.update_state(params, dv, v, rates, dt, cfg.t_amb)
-            dvp, dvn = aging.totals(dv)
-            delay0 = poly(dvp * 1e-3, dvn * 1e-3, v)
-
-            def boost_cond(state):
-                v_, d_, it = state
-                return ((d_ > dmax) & (v_ < cfg.v_max - 1e-6)
-                        & (it < cfg.max_boosts_per_step) & avs_enabled)
-
-            def boost(state):
-                v_, _, it = state
-                v_ = v_ + cfg.v_step
-                return v_, poly(dvp * 1e-3, dvn * 1e-3, v_), it + 1
-
-            v, delay, _ = jax.lax.while_loop(
-                boost_cond, boost, (v, delay0, jnp.asarray(0)))
-            out = {"V": v, "delay": delay, "dvp": dvp, "dvn": dvn, "dv": dv}
-            return (dv, v), out
-
-        init = (jnp.zeros((aging.N_POP,), jnp.float32),
-                jnp.asarray(cfg.v_init, jnp.float32))
-        _, traj = jax.lax.scan(step, init, dts)
-        traj["t"] = tgrid
-        return traj
-
-    if delay_max.ndim == 0:
-        return one_lifetime(delay_max)
-    return jax.vmap(one_lifetime)(delay_max)
+    traj = simulate(params, poly, cfg.scenario(),
+                    delay_max=jnp.asarray(delay_max, jnp.float32),
+                    recovery=recovery, avs_enabled=avs_enabled)
+    return traj.to_dict()
 
 
 def final_shifts(traj) -> Dict[str, float]:
     """Convenience: end-of-life (ΔVth_p, ΔVth_n) in mV and final V."""
+    if isinstance(traj, LifetimeTrajectory):
+        traj = traj.to_dict()
     return {
         "dvp": float(np.asarray(traj["dvp"])[-1]),
         "dvn": float(np.asarray(traj["dvn"])[-1]),
@@ -110,5 +165,7 @@ def final_shifts(traj) -> Dict[str, float]:
 
 
 def per_population_finals(traj) -> Dict[str, float]:
+    if isinstance(traj, LifetimeTrajectory):
+        traj = traj.to_dict()
     dv = np.asarray(traj["dv"])[-1]
     return {name: float(dv[i]) for i, name in enumerate(aging.POPULATIONS)}

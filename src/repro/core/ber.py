@@ -65,6 +65,15 @@ class BerModel:
         d = self.t_clk - self.tau * math.log(gap / self.a)
         return float(min(max(d, self.t_clk), DELAY_MAX_CAP))
 
+    def delay_for_ber(self, ber_tol):
+        """Traced (jnp) form of :meth:`delay_max_for_ber` — batches over a
+        tolerable-BER array so policy thresholds vmap over accuracy budgets."""
+        ber_tol = jnp.asarray(ber_tol)
+        gap = self.log10_sat - jnp.log10(jnp.maximum(ber_tol, 1e-30))
+        d = self.t_clk - self.tau * jnp.log(jnp.maximum(gap, 1e-30) / self.a)
+        return jnp.where(gap <= 0.0, DELAY_MAX_CAP,
+                         jnp.clip(d, self.t_clk, DELAY_MAX_CAP))
+
     def to_dict(self) -> Dict[str, Any]:
         return {"log10_sat": float(self.log10_sat), "a": float(self.a),
                 "tau": float(self.tau), "t_clk": float(self.t_clk)}

@@ -192,8 +192,7 @@ def calibrate_delay_knobs(params: AgingParams, cfg: LifetimeConfig):
     """Search (alpha, vth0, wire_frac, pn_split) for the AVS-row prediction."""
     from scipy.optimize import minimize
 
-    # params are closed over (stress_rates pre-computes activity factors in
-    # numpy and must see concrete values); the polynomial is the traced arg.
+    # the polynomial is the traced argument; everything else is closed over
     run = jax.jit(lambda po: run_lifetime(params, po, cfg,
                                           delay_max=cfg.t_clk, recovery=True))
 

@@ -23,6 +23,9 @@ DUTY_FACTOR = 0.5           # midpoint of the measured 0.4-0.6 range
 TOGGLE_RATE = 0.0075        # midpoint of the measured 0.006-0.009 range
 TRANSITION_TIME = 0.10e-9   # output transition (10%-90%) [s], HSPICE-typical
 
+# --- policy defaults (Sec. IV-B) --------------------------------------------
+DEFAULT_MAX_LOSS_PCT = 0.5  # default tolerable accuracy loss [% points]
+
 # --- systolic array (Sec. V-A) ----------------------------------------------
 ARRAY_DIM = 256             # 256x256 PEs
 PE_IN_BITS = 8              # 8-bit multiplier inputs

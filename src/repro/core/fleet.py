@@ -1,0 +1,275 @@
+"""Fleet-scale serving-time integration of the AVS policy.
+
+:class:`FleetRuntime` generalises the old per-op ``AgingAwareRuntime`` into a
+vectorised primitive: it holds **N devices x O operator domains** as arrays.
+All N·O lifetime trajectories come from ONE vmapped
+:func:`repro.core.avs.simulate` call (computed lazily, cached), device ages
+are a vector, and the age -> state lookup is a single vectorised
+searchsorted-equivalent over the whole fleet — no Python loops on the hot
+path.  The power model is built once at construction.
+
+Devices may share one mission profile (scalar :class:`Scenario`, trajectories
+broadcast across the fleet at zero extra compute) or carry per-device
+profiles (a ``(N,)``-batched scenario — heterogeneous duty/temperature/budget
+fleets, cf. workload-dependent stress in *Long-Term and Short-Term
+Transistor Aging in DNNs*).
+
+:meth:`device` returns a :class:`DeviceView` exposing the legacy single-
+device protocol (``op_bers``, ``domain_state``, ``total_power``, ...), which
+is what :class:`repro.serve.engine.ServeEngine` consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+from .artifacts import Calibration, load_calibration
+from .avs import simulate
+from .constants import DEFAULT_MAX_LOSS_PCT
+from .policy import BaselinePolicy, FaultTolerantPolicy, Policy, get_policy
+from .resilience import OPERATORS
+from .scenario import LifetimeTrajectory, Scenario
+
+SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
+
+
+@dataclasses.dataclass
+class DomainState:
+    """Snapshot of one operator voltage domain at the current age."""
+    v_dd: float
+    delay: float
+    dvth_p_mv: float
+    dvth_n_mv: float
+    ber: float
+    power_w: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """Snapshot of the whole fleet; every field has shape ``(N, O)``."""
+    v_dd: np.ndarray
+    delay: np.ndarray
+    dvth_p_mv: np.ndarray
+    dvth_n_mv: np.ndarray
+    ber: np.ndarray
+    power_w: np.ndarray
+
+    def domain(self, device: int, op_idx: int) -> DomainState:
+        return DomainState(
+            v_dd=float(self.v_dd[device, op_idx]),
+            delay=float(self.delay[device, op_idx]),
+            dvth_p_mv=float(self.dvth_p_mv[device, op_idx]),
+            dvth_n_mv=float(self.dvth_n_mv[device, op_idx]),
+            ber=float(self.ber[device, op_idx]),
+            power_w=float(self.power_w[device, op_idx]),
+        )
+
+
+class FleetRuntime:
+    """N aging accelerators x O operator voltage domains, fully vectorised."""
+
+    def __init__(self, cal: Optional[Calibration] = None, *,
+                 n_devices: int = 1,
+                 scenario: Optional[Scenario] = None,
+                 policy: Policy | str = "fault_tolerant",
+                 max_loss_pct: float = DEFAULT_MAX_LOSS_PCT,
+                 operators: tuple[str, ...] = OPERATORS, curves=None):
+        """``max_loss_pct`` sets the budget of the *default* scenario; when
+        an explicit ``scenario`` is passed, its own (possibly per-device)
+        ``max_loss_pct`` leaf governs the policy thresholds instead."""
+        self.cal = cal or load_calibration()
+        self.operators = tuple(operators)
+        if isinstance(policy, str):
+            if policy == "fault_tolerant":
+                # budget deliberately NOT pinned on the policy: it reads
+                # scenario.max_loss_pct, so per-device budgets batch
+                policy = FaultTolerantPolicy(ber_model=self.cal.ber,
+                                             curves=curves)
+            elif policy == "baseline":
+                policy = BaselinePolicy(t_clk=self.cal.lifetime_cfg.t_clk)
+            else:
+                policy = get_policy(policy)
+        self.policy = policy
+
+        if scenario is None:
+            scenario = Scenario.from_lifetime_config(self.cal.lifetime_cfg,
+                                                     max_loss_pct)
+        sbatch = scenario.batch_shape
+        assert len(sbatch) <= 1, \
+            "FleetRuntime scenarios must be scalar or (n_devices,)-batched"
+        if sbatch:
+            assert n_devices in (1, sbatch[0]), \
+                f"n_devices={n_devices} conflicts with scenario batch {sbatch}"
+            n_devices = sbatch[0]
+        self.scenario = scenario
+        self.n_devices = int(n_devices)
+        self._scenario_batched = bool(sbatch)
+        # power model referenced once here — never rebuilt per lookup
+        self._power = self.cal.power
+        self._ages_s = np.zeros(self.n_devices, np.float64)
+        self._traj: Optional[LifetimeTrajectory] = None
+        self._snap: Optional[FleetState] = None     # cache, keyed on ages
+
+    @classmethod
+    def for_model(cls, cfg, **kw) -> "FleetRuntime":
+        """Fleet with the architecture family's operator-domain set
+        (DESIGN.md §Arch-applicability): attention-free families get their
+        projection domains instead of the vacuous qkt/sv rows."""
+        from .resilience import default_curves, operators_for
+        ops = operators_for(cfg.family)
+        return cls(operators=ops, curves=default_curves(ops), **kw)
+
+    # ------------------------------------------------------------------ #
+    def _ensure_trajs(self) -> LifetimeTrajectory:
+        """All N x O trajectories from one vmapped scan, as (N, O, T) views."""
+        if self._traj is None:
+            dmax = self.policy.thresholds(self.scenario, self.operators)
+            traj: LifetimeTrajectory = simulate(
+                self.cal.aging, self.cal.delay_poly,
+                self.scenario.expand_dims(-1), delay_max=dmax)
+            O = len(self.operators)
+            out = {}
+            for k, v in traj.to_dict().items():
+                v = np.asarray(v)
+                tail = v.shape[(1 if self._scenario_batched else 0) + 1:]
+                # scalar scenario: (O, T...) -> broadcast view (N, O, T...)
+                target = (self.n_devices, O) + tail
+                out[k] = v if self._scenario_batched \
+                    else np.broadcast_to(v, target)
+            self._traj = LifetimeTrajectory(**out)
+        return self._traj
+
+    @property
+    def trajectories(self) -> LifetimeTrajectory:
+        """(N, O, T) lifetime trajectories (lazily computed, cached)."""
+        return self._ensure_trajs()
+
+    # ------------------------------------------------------------------ #
+    def set_age(self, *, years=None, seconds=None, device=None):
+        """Set the simulated age of one device (or the whole fleet)."""
+        assert (years is None) != (seconds is None)
+        age = float(seconds if seconds is not None
+                    else years * SECONDS_PER_YEAR)
+        if device is None:
+            self._ages_s[:] = age
+        else:
+            self._ages_s[device] = age
+        self._snap = None
+
+    def advance(self, seconds, device=None):
+        if device is None:
+            self._ages_s += np.asarray(seconds, np.float64)
+        else:
+            self._ages_s[device] += float(seconds)
+        self._snap = None
+
+    @property
+    def ages_years(self) -> np.ndarray:
+        return self._ages_s / SECONDS_PER_YEAR
+
+    @property
+    def age_years(self) -> float:
+        """Fleet-uniform age convenience (device 0)."""
+        return float(self._ages_s[0]) / SECONDS_PER_YEAR
+
+    # ------------------------------------------------------------------ #
+    def _age_indices(self) -> np.ndarray:
+        """Per (device, op) grid index of each device's current age — the
+        trajectory's vectorised searchsorted-equivalent over the fleet."""
+        return self._ensure_trajs().age_index(self._ages_s[:, None])
+
+    def snapshot(self) -> FleetState:
+        """Current state of every (device, operator) domain: (N, O) arrays.
+
+        Cached between age changes — per-domain accessors (``op_ber``,
+        ``total_power``, ...) share one fleet-wide computation."""
+        if self._snap is None:
+            traj = self._ensure_trajs()
+            idx = self._age_indices()[..., None]           # (N, O, 1)
+            pick = lambda k: np.take_along_axis(
+                np.asarray(getattr(traj, k)), idx, axis=-1)[..., 0]
+            v, delay = pick("V"), pick("delay")
+            dvp, dvn = pick("dvp"), pick("dvn")
+            ber = np.asarray(self.cal.ber.ber_from_delay(delay))
+            power = np.asarray(self._power.power(v, dvp, dvn))
+            self._snap = FleetState(v_dd=v, delay=delay, dvth_p_mv=dvp,
+                                    dvth_n_mv=dvn, ber=ber, power_w=power)
+        return self._snap
+
+    # ------------------------------------------------------------------ #
+    def op_index(self, op: str) -> int:
+        return self.operators.index(op)
+
+    def domain_state(self, op: str, device: int = 0) -> DomainState:
+        return self.snapshot().domain(device, self.op_index(op))
+
+    def op_ber(self, op: str, device: int = 0) -> float:
+        return float(self.snapshot().ber[device, self.op_index(op)])
+
+    def op_bers(self, device: int = 0) -> Dict[str, float]:
+        ber = self.snapshot().ber[device]
+        return {op: float(ber[i]) for i, op in enumerate(self.operators)}
+
+    def total_power(self, device: int = 0) -> float:
+        return float(self.snapshot().power_w[device].sum())
+
+    def fleet_power(self) -> np.ndarray:
+        """Per-device array power [W], shape (N,)."""
+        return self.snapshot().power_w.sum(axis=-1)
+
+    def summary(self, device: int = 0) -> Mapping[str, Dict]:
+        s = self.snapshot()
+        return {op: dataclasses.asdict(s.domain(device, i))
+                for i, op in enumerate(self.operators)}
+
+    def device(self, i: int = 0) -> "DeviceView":
+        assert 0 <= i < self.n_devices
+        return DeviceView(self, i)
+
+
+class DeviceView:
+    """Single-device facade over a :class:`FleetRuntime` — implements the
+    legacy ``AgingAwareRuntime`` protocol the serving engine consumes."""
+
+    def __init__(self, fleet: FleetRuntime, index: int):
+        self.fleet = fleet
+        self.index = index
+
+    @property
+    def cal(self) -> Calibration:
+        return self.fleet.cal
+
+    @property
+    def operators(self) -> tuple:
+        return self.fleet.operators
+
+    @property
+    def policy(self):
+        return self.fleet.policy
+
+    @property
+    def age_years(self) -> float:
+        return float(self.fleet.ages_years[self.index])
+
+    def set_age(self, *, years=None, seconds=None):
+        self.fleet.set_age(years=years, seconds=seconds, device=self.index)
+
+    def advance(self, seconds):
+        self.fleet.advance(seconds, device=self.index)
+
+    def domain_state(self, op: str) -> DomainState:
+        return self.fleet.domain_state(op, device=self.index)
+
+    def op_ber(self, op: str) -> float:
+        return self.fleet.op_ber(op, device=self.index)
+
+    def op_bers(self) -> Dict[str, float]:
+        return self.fleet.op_bers(device=self.index)
+
+    def total_power(self) -> float:
+        return self.fleet.total_power(device=self.index)
+
+    def summary(self) -> Mapping[str, Dict]:
+        return self.fleet.summary(device=self.index)

@@ -1,48 +1,140 @@
 """Voltage-scaling policies (paper Sec. III-F baseline, Sec. IV fault-tolerant).
 
+A policy maps a :class:`~repro.core.scenario.Scenario` (batch) to per-operator
+``delay_max`` thresholds.  The protocol is one traced method::
+
+    thresholds(scenario, operators) -> jnp.ndarray [batch_shape + (O,)]
+
+so a whole sweep — accuracy budgets x mission profiles x operator domains —
+evaluates as ONE vmapped lifetime scan via :func:`sweep_policy`.
+
 * :class:`BaselinePolicy` — classical AVS: raise V_DD on *every* detected
   timing violation, i.e. ``delay_max = t_clk`` for every operator domain.
 * :class:`FaultTolerantPolicy` — per-operator ``delay_max`` obtained by
-  inverting the BER model at each operator's tolerable BER (user-specified
-  accuracy budget, default 0.5%).  Voltage increases are deferred while the
-  induced BER stays within the operator's resilience.
+  inverting the BER model at each operator's tolerable BER at the scenario's
+  accuracy budget (``scenario.max_loss_pct``).  Voltage increases are
+  deferred while the induced BER stays within the operator's resilience.
 
-Both produce a vector of delay thresholds over the operator domains so the
-whole policy evaluates as ONE vmapped lifetime scan.
+New policies register by name via :func:`register_policy` and are resolved
+with :func:`get_policy` (used by ``FleetRuntime`` and the launchers).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping
+from typing import Dict, Mapping, Protocol, runtime_checkable
 
+import jax.numpy as jnp
 import numpy as np
 
-from .avs import LifetimeConfig, run_lifetime
-from .ber import BerModel
-from .constants import T_CLK
-from .delay import DelayPolynomial
 from .aging import AgingParams
-from .power import PowerModel, lifetime_stats
+from .avs import LifetimeConfig, simulate
+from .ber import BerModel
+from .constants import DEFAULT_MAX_LOSS_PCT, T_CLK
+from .delay import DelayPolynomial
+from .power import PowerModel, batched_lifetime_stats
 from .resilience import OPERATORS, ResilienceCurve, default_curves, tolerable_bers
+from .scenario import LifetimeTrajectory, Scenario
 
 
+@runtime_checkable
+class Policy(Protocol):
+    """Anything that maps scenarios to per-operator delay thresholds."""
+
+    def thresholds(self, scenario: Scenario,
+                   operators: tuple = OPERATORS) -> jnp.ndarray:
+        """Per-operator delay_max [s], shape ``batch_shape + (O,)``."""
+        ...
+
+
+POLICY_REGISTRY: Dict[str, type] = {}
+
+
+def register_policy(cls):
+    """Class decorator: register a policy under its ``name`` attribute."""
+    POLICY_REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str, **kw):
+    """Instantiate a registered policy by name."""
+    try:
+        return POLICY_REGISTRY[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; registered: "
+                       f"{sorted(POLICY_REGISTRY)}") from None
+
+
+@register_policy
 @dataclasses.dataclass(frozen=True)
 class BaselinePolicy:
+    """Classical AVS: the threshold IS the scenario's clock period.  The
+    ``t_clk`` field only serves the scenario-free legacy :meth:`delay_max`."""
+    name = "baseline"
     t_clk: float = T_CLK
 
+    def thresholds(self, scenario: Scenario,
+                   operators: tuple = OPERATORS) -> jnp.ndarray:
+        t = jnp.broadcast_to(jnp.asarray(scenario.t_clk, jnp.float32),
+                             scenario.batch_shape)
+        return jnp.broadcast_to(t[..., None],
+                                scenario.batch_shape + (len(operators),))
+
+    # legacy scalar API ------------------------------------------------- #
     def delay_max(self) -> Dict[str, float]:
         return {op: self.t_clk for op in OPERATORS}
 
 
+@register_policy
 @dataclasses.dataclass(frozen=True)
 class FaultTolerantPolicy:
+    """``max_loss_pct=None`` (default) defers the accuracy budget to
+    ``scenario.max_loss_pct`` — budgets then batch like any scenario knob.
+    An explicit float pins the budget and overrides the scenario's, keeping
+    the traced path consistent with the legacy :meth:`delay_max`."""
+    name = "fault_tolerant"
     ber_model: BerModel
-    max_loss_pct: float = 0.5
+    max_loss_pct: float | None = None
     curves: Mapping[str, ResilienceCurve] | None = None
 
+    def _budget_scalar(self) -> float:
+        return DEFAULT_MAX_LOSS_PCT if self.max_loss_pct is None \
+            else self.max_loss_pct
+
+    def _curve_params(self, operators):
+        curves = self.curves or default_curves(tuple(operators))
+        ber50 = np.array([curves[op].ber50 for op in operators], np.float64)
+        steep = np.array([curves[op].steepness for op in operators],
+                         np.float64)
+        lmax = np.array([curves[op].l_max for op in operators], np.float64)
+        return (jnp.asarray(np.log10(ber50), jnp.float32),
+                jnp.asarray(steep, jnp.float32),
+                jnp.asarray(lmax, jnp.float32))
+
+    def thresholds(self, scenario: Scenario,
+                   operators: tuple = OPERATORS) -> jnp.ndarray:
+        """Invert resilience curves at ``scenario.max_loss_pct``, then invert
+        the BER curve — all in jnp so budgets batch/vmap like any knob."""
+        log_b50, steep, lmax = self._curve_params(operators)
+        budget_src = scenario.max_loss_pct if self.max_loss_pct is None \
+            else self.max_loss_pct
+        budget = jnp.broadcast_to(
+            jnp.asarray(budget_src, jnp.float32),
+            scenario.batch_shape)[..., None]
+        frac = jnp.clip(budget / lmax, 1e-9, 1.0 - 1e-9)
+        x = jnp.log(frac / (1.0 - frac))
+        tol = 10.0 ** (log_b50 + x / steep)
+        d = self.ber_model.delay_for_ber(tol)
+        # the BER curve is calibrated at the nominal clock; when the scenario
+        # sweeps t_clk past it, a threshold below the clock period would be
+        # meaningless (violations only exist past the clock edge) — clamp.
+        t_clk = jnp.broadcast_to(jnp.asarray(scenario.t_clk, jnp.float32),
+                                 scenario.batch_shape)[..., None]
+        return jnp.maximum(d, t_clk).astype(jnp.float32)
+
+    # legacy scalar API ------------------------------------------------- #
     def tolerable_ber(self) -> Dict[str, float]:
         return tolerable_bers(self.curves or default_curves(),
-                              self.max_loss_pct)
+                              self._budget_scalar())
 
     def delay_max(self) -> Dict[str, float]:
         tols = self.tolerable_ber()
@@ -50,29 +142,58 @@ class FaultTolerantPolicy:
                 for op, tol in tols.items()}
 
 
+# --------------------------------------------------------------------------- #
+def sweep_policy(policy: Policy, params: AgingParams, poly: DelayPolynomial,
+                 scenarios: Scenario, *, operators: tuple = OPERATORS,
+                 recovery: bool = True) -> LifetimeTrajectory:
+    """Run a policy over a scenario batch — ONE vmapped lifetime scan.
+
+    Returns a trajectory with batch shape ``scenarios.batch_shape + (O,)``:
+    the scenario leaves gain a trailing broadcast operator axis, the policy
+    supplies the matching threshold array, and :func:`simulate` flattens the
+    joint batch into a single trace/compile.
+    """
+    dmax = policy.thresholds(scenarios, operators)
+    return simulate(params, poly, scenarios.expand_dims(-1), delay_max=dmax,
+                    recovery=recovery)
+
+
 def evaluate_policy(policy, params: AgingParams, poly: DelayPolynomial,
                     power: PowerModel,
-                    cfg: LifetimeConfig = LifetimeConfig()) -> Dict[str, Dict]:
+                    cfg: LifetimeConfig | Scenario = LifetimeConfig()
+                    ) -> Dict[str, Dict]:
     """Run the lifetime simulation for every operator domain of a policy.
 
     Returns ``{operator: {v_final, dvp, dvn, v_eff, p_avg, traj}}`` plus the
-    ``baseline`` row (classical AVS) for the power-saving comparison.
+    ``baseline`` row (classical AVS) for the power-saving comparison.  The
+    operator rows *and* the baseline run in one vmapped scan.
     """
-    dmax = policy.delay_max()
-    ops = list(dmax.keys())
-    vec = np.asarray([dmax[op] for op in ops], np.float32)
-    trajs = run_lifetime(params, poly, cfg, delay_max=vec)
+    if isinstance(cfg, Scenario):
+        scn = cfg
+    else:
+        budget = getattr(policy, "max_loss_pct", None)
+        scn = cfg.scenario() if budget is None else cfg.scenario(budget)
+    assert scn.batch_shape == (), \
+        "evaluate_policy takes one scenario; use sweep_policy for batches"
+    ops = list(OPERATORS)
+    dmax = policy.thresholds(scn, tuple(ops))               # (O,)
+    # append the baseline (delay_max = t_clk) as a 10th pseudo-operator so
+    # the whole table is one vmapped call
+    dmax_all = jnp.concatenate(
+        [dmax, jnp.reshape(jnp.asarray(scn.t_clk, jnp.float32), (1,))])
+    trajs = simulate(params, poly, scn, delay_max=dmax_all)
+    stats = batched_lifetime_stats(power, trajs)
 
-    base = run_lifetime(params, poly, cfg, delay_max=cfg.t_clk)
-    base_stats = lifetime_stats(power, base)
-
-    out: Dict[str, Dict] = {"baseline": dict(base_stats, traj=base)}
+    base_traj = trajs[len(ops)]
+    base_stats = {k: float(v[len(ops)]) for k, v in stats.items()}
+    out: Dict[str, Dict] = {"baseline": dict(base_stats,
+                                             traj=base_traj.to_dict())}
     for i, op in enumerate(ops):
-        traj_i = {k: np.asarray(v)[i] for k, v in trajs.items()}
-        st = lifetime_stats(power, traj_i)
-        st["power_saving_pct"] = 100.0 * (1.0 - st["p_avg"] / base_stats["p_avg"])
-        st["delay_max"] = float(dmax[op])
-        out[op] = dict(st, traj=traj_i)
+        st = {k: float(v[i]) for k, v in stats.items()}
+        st["power_saving_pct"] = 100.0 * (1.0 - st["p_avg"]
+                                          / base_stats["p_avg"])
+        st["delay_max"] = float(dmax[i])
+        out[op] = dict(st, traj=trajs[i].to_dict())
     savings = [out[op]["power_saving_pct"] for op in ops]
     out["avg_power_saving_pct"] = float(np.mean(savings))
     return out

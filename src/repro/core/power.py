@@ -75,18 +75,31 @@ def calibrate_power(traj_nom, traj_avs, target_nom: float = 0.85,
     return PowerModel(p_dyn0=float(sol[0]), p_leak0=float(sol[1]), **kw)
 
 
-def lifetime_stats(power_model: PowerModel, traj) -> Dict[str, float]:
-    """Time-weighted lifetime averages: V_eff [V] and P_avg [W]."""
+def batched_lifetime_stats(power_model: PowerModel, traj
+                           ) -> Dict[str, np.ndarray]:
+    """Vectorised :func:`lifetime_stats` over arbitrary batch dimensions.
+
+    ``traj`` is a :class:`repro.core.scenario.LifetimeTrajectory` (or a dict
+    of arrays) whose time axis is last; returns batch-shaped arrays.
+    """
+    if hasattr(traj, "to_dict"):
+        traj = traj.to_dict()
     t = np.asarray(traj["t"], np.float64)
-    wdt = np.diff(t, prepend=0.0)
-    wdt = wdt / wdt.sum()
+    wdt = np.diff(t, axis=-1, prepend=0.0)
+    wdt = wdt / wdt.sum(axis=-1, keepdims=True)
     p = np.asarray(power_model.power(traj["V"], traj["dvp"], traj["dvn"]),
                    np.float64)
     v = np.asarray(traj["V"], np.float64)
     return {
-        "v_eff": float((v * wdt).sum()),
-        "p_avg": float((p * wdt).sum()),
-        "v_final": float(v[-1]),
-        "dvp_final": float(np.asarray(traj["dvp"])[-1]),
-        "dvn_final": float(np.asarray(traj["dvn"])[-1]),
+        "v_eff": (v * wdt).sum(axis=-1),
+        "p_avg": (p * wdt).sum(axis=-1),
+        "v_final": v[..., -1],
+        "dvp_final": np.asarray(traj["dvp"], np.float64)[..., -1],
+        "dvn_final": np.asarray(traj["dvn"], np.float64)[..., -1],
     }
+
+
+def lifetime_stats(power_model: PowerModel, traj) -> Dict[str, float]:
+    """Time-weighted lifetime averages: V_eff [V] and P_avg [W]."""
+    return {k: float(v)
+            for k, v in batched_lifetime_stats(power_model, traj).items()}

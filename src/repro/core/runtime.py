@@ -1,60 +1,39 @@
-"""Serving-time integration of the AVS policy (framework feature layer).
+"""Serving-time integration of the AVS policy (legacy single-device shim).
 
-An :class:`AgingAwareRuntime` owns one *voltage domain per operator class*
-(the paper's Table II rows: q, k, v, qkt, sv, o, gate, up, down).  The
-runtime advances simulated device age, and for the current age exposes each
-operator's supply voltage, aging state, BER and power draw.  The serving
-engine (``repro.serve``) queries :meth:`op_ber` to drive the bit-error
-injection kernels, so a model served on an "old" device sees exactly the
-per-operator error rates the policy admits.
+:class:`AgingAwareRuntime` keeps the original one-device API — one *voltage
+domain per operator class* (the paper's Table II rows: q, k, v, qkt, sv, o,
+gate, up, down) with simulated age, per-operator supply voltage, aging
+state, BER and power draw — but is now a thin facade over the vectorised
+:class:`repro.core.fleet.FleetRuntime` with ``n_devices=1``.  All
+trajectories come from ONE vmapped lifetime scan (computed lazily, cached),
+age lookups are vectorised, and the power model is built once at
+construction (it used to be re-deserialised per ``domain_state`` call).
 
-All trajectories come from ONE vmapped lifetime scan, computed lazily and
-cached; age lookups are O(log n) searchsorted on the log time grid.
+New code should use :class:`~repro.core.fleet.FleetRuntime` directly; see
+DESIGN.md §Scenario/Policy/FleetRuntime and §Migration.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Mapping, Optional
-
-import numpy as np
+from typing import Optional
 
 from .artifacts import Calibration, load_calibration
-from .avs import run_lifetime
-from .policy import BaselinePolicy, FaultTolerantPolicy
-from .power import PowerModel
+from .constants import DEFAULT_MAX_LOSS_PCT
+from .fleet import SECONDS_PER_YEAR  # noqa: F401  (re-export, legacy import path)
+from .fleet import DeviceView, DomainState, FleetRuntime  # noqa: F401
 from .resilience import OPERATORS
 
-SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
 
-
-@dataclasses.dataclass
-class DomainState:
-    """Snapshot of one operator voltage domain at the current age."""
-    v_dd: float
-    delay: float
-    dvth_p_mv: float
-    dvth_n_mv: float
-    ber: float
-    power_w: float
-
-
-class AgingAwareRuntime:
+class AgingAwareRuntime(DeviceView):
     def __init__(self, cal: Optional[Calibration] = None, *,
-                 fault_tolerant: bool = True, max_loss_pct: float = 0.5,
+                 fault_tolerant: bool = True,
+                 max_loss_pct: float = DEFAULT_MAX_LOSS_PCT,
                  operators: tuple[str, ...] = OPERATORS, curves=None):
-        self.cal = cal or load_calibration()
-        self.operators = operators
-        if fault_tolerant:
-            self.policy = FaultTolerantPolicy(ber_model=self.cal.ber,
-                                              max_loss_pct=max_loss_pct,
-                                              curves=curves)
-        else:
-            self.policy = BaselinePolicy(t_clk=self.cal.lifetime_cfg.t_clk)
-        dmax_map = self.policy.delay_max()
-        self._dmax = np.asarray([dmax_map.get(op, self.cal.lifetime_cfg.t_clk)
-                                 for op in operators], np.float32)
-        self._age_s = 0.0
-        self._trajs = None
+        cal = cal or load_calibration()
+        fleet = FleetRuntime(
+            cal, n_devices=1,
+            policy="fault_tolerant" if fault_tolerant else "baseline",
+            max_loss_pct=max_loss_pct, operators=operators, curves=curves)
+        super().__init__(fleet, 0)
 
     @classmethod
     def for_model(cls, cfg, **kw) -> "AgingAwareRuntime":
@@ -64,56 +43,3 @@ class AgingAwareRuntime:
         from .resilience import default_curves, operators_for
         ops = operators_for(cfg.family)
         return cls(operators=ops, curves=default_curves(ops), **kw)
-
-    # ------------------------------------------------------------------ #
-    def _ensure_trajs(self):
-        if self._trajs is None:
-            trajs = run_lifetime(self.cal.aging, self.cal.delay_poly,
-                                 self.cal.lifetime_cfg, delay_max=self._dmax)
-            self._trajs = {k: np.asarray(v) for k, v in trajs.items()}
-        return self._trajs
-
-    def set_age(self, *, years: float = None, seconds: float = None):
-        assert (years is None) != (seconds is None)
-        self._age_s = float(seconds if seconds is not None
-                            else years * SECONDS_PER_YEAR)
-
-    @property
-    def age_years(self) -> float:
-        return self._age_s / SECONDS_PER_YEAR
-
-    def advance(self, seconds: float):
-        self._age_s += float(seconds)
-
-    # ------------------------------------------------------------------ #
-    def domain_state(self, op: str) -> DomainState:
-        trajs = self._ensure_trajs()
-        i = self.operators.index(op)
-        t = trajs["t"][i] if trajs["t"].ndim == 2 else trajs["t"]
-        k = int(np.clip(np.searchsorted(t, max(self._age_s, t[0])), 0,
-                        len(t) - 1))
-        v = float(trajs["V"][i, k])
-        delay = float(trajs["delay"][i, k])
-        dvp = float(trajs["dvp"][i, k])
-        dvn = float(trajs["dvn"][i, k])
-        power = PowerModel.from_dict(self.cal.power.to_dict()) \
-            .power(v, dvp, dvn)
-        return DomainState(
-            v_dd=v, delay=delay, dvth_p_mv=dvp, dvth_n_mv=dvn,
-            ber=float(self.cal.ber.ber_from_delay(delay)),
-            power_w=float(power),
-        )
-
-    def op_ber(self, op: str) -> float:
-        """Current BER the policy admits for this operator domain."""
-        return self.domain_state(op).ber
-
-    def op_bers(self) -> Dict[str, float]:
-        return {op: self.op_ber(op) for op in self.operators}
-
-    def total_power(self) -> float:
-        return sum(self.domain_state(op).power_w for op in self.operators)
-
-    def summary(self) -> Mapping[str, Dict]:
-        return {op: dataclasses.asdict(self.domain_state(op))
-                for op in self.operators}

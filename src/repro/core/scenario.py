@@ -1,0 +1,262 @@
+"""Scenario-batched mission profiles — the pytree core of the policy API.
+
+A :class:`Scenario` bundles every knob of one lifetime simulation — the
+mission profile (duty factor, toggle rate, ambient temperature), the supply
+envelope (v_init / v_step / v_max), the clock, the horizon, and the user's
+accuracy budget — as *leaves of a JAX pytree*.  Any leaf may carry batch
+dimensions; all leaves broadcast against each other, so a 2-D sweep such as
+
+    scn = scenario_grid(max_loss_pct=[0.1, 0.5, 2.0], duty=[0.3, 0.5, 0.7])
+
+is simply a ``Scenario`` whose ``max_loss_pct`` leaf has shape ``(3, 1)``
+and ``duty`` leaf shape ``(1, 3)``.  :func:`repro.core.avs.simulate` flattens
+the broadcast batch, runs ONE vmapped ``lax.scan`` over it (stress rates are
+computed inside the traced function, so activity knobs batch too), and
+reshapes the resulting :class:`LifetimeTrajectory` back — a single
+trace/compile regardless of sweep dimensionality.
+
+Static structure (grid length, boost bound) lives in the pytree aux data so
+jit/vmap treat it as compile-time constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .constants import (DEFAULT_MAX_LOSS_PCT, DUTY_FACTOR, LIFETIME_S, T_AMB,
+                        T_CLK, TOGGLE_RATE, TRANSITION_TIME, V_MAX, V_NOM,
+                        V_STEP)
+
+# Leaf fields, in pytree order.  Everything here may be batched / traced.
+SCENARIO_FIELDS = (
+    "t_clk", "v_init", "v_step", "v_max",
+    "duty", "toggle", "transition_time", "t_amb",
+    "lifetime_s", "t_start", "max_loss_pct",
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One mission profile (or an N-D broadcastable batch of them)."""
+
+    t_clk: Any = T_CLK                  # clock period [s]
+    v_init: Any = V_NOM                 # initial supply [V]
+    v_step: Any = V_STEP                # AVS increment [V]
+    v_max: Any = V_MAX                  # supply ceiling [V]
+    duty: Any = DUTY_FACTOR             # BTI duty factor
+    toggle: Any = TOGGLE_RATE           # HCI toggle rate
+    transition_time: Any = TRANSITION_TIME   # output transition [s]
+    t_amb: Any = T_AMB                  # ambient temperature [K]
+    lifetime_s: Any = LIFETIME_S        # simulated horizon [s]
+    t_start: Any = 600.0                # first grid point [s]
+    max_loss_pct: Any = DEFAULT_MAX_LOSS_PCT    # accuracy budget [% loss]
+    # --- static (aux) structure -------------------------------------------
+    n_steps: int = 480                  # log-spaced grid points
+    max_boosts_per_step: int = 4        # inner while-loop bound
+
+    # ------------------------------------------------------------------ #
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in SCENARIO_FIELDS),
+                (self.n_steps, self.max_boosts_per_step))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_steps=aux[0], max_boosts_per_step=aux[1])
+
+    # ------------------------------------------------------------------ #
+    @property
+    def batch_shape(self) -> tuple:
+        """Common broadcast shape of all leaves; ``()`` for a single one."""
+        return jnp.broadcast_shapes(
+            *(jnp.shape(getattr(self, f)) for f in SCENARIO_FIELDS))
+
+    @property
+    def n_scenarios(self) -> int:
+        return int(np.prod(self.batch_shape, dtype=np.int64)) \
+            if self.batch_shape else 1
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    def map_leaves(self, fn) -> "Scenario":
+        return self.replace(
+            **{f: fn(jnp.asarray(getattr(self, f), jnp.float32))
+               for f in SCENARIO_FIELDS})
+
+    def expand_dims(self, axis: int = -1) -> "Scenario":
+        """Insert a broadcast axis on every leaf (e.g. the operator axis)."""
+        return self.map_leaves(lambda x: jnp.expand_dims(x, axis))
+
+    def broadcast_leaves(self, shape=None) -> "Scenario":
+        """Materialise every leaf at the (given or common) batch shape."""
+        shape = self.batch_shape if shape is None else tuple(shape)
+        return self.map_leaves(lambda x: jnp.broadcast_to(x, shape))
+
+    def reshape(self, shape) -> "Scenario":
+        return self.broadcast_leaves().map_leaves(
+            lambda x: x.reshape(tuple(shape)))
+
+    def __getitem__(self, idx) -> "Scenario":
+        """Index into the batch (after materialising the broadcast)."""
+        return self.broadcast_leaves().map_leaves(lambda x: x[idx])
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def nominal(cls, **overrides) -> "Scenario":
+        """The paper's operating point (Sec. V-A) with optional overrides."""
+        return cls(**overrides)
+
+    @classmethod
+    def from_lifetime_config(cls, cfg,
+                             max_loss_pct: float = DEFAULT_MAX_LOSS_PCT,
+                             **overrides) -> "Scenario":
+        """Adapter from the legacy :class:`repro.core.avs.LifetimeConfig`."""
+        kw = dict(
+            t_clk=cfg.t_clk, v_init=cfg.v_init, v_step=cfg.v_step,
+            v_max=cfg.v_max, duty=cfg.duty, toggle=cfg.toggle,
+            transition_time=cfg.transition_time, t_amb=cfg.t_amb,
+            lifetime_s=cfg.lifetime_s, t_start=cfg.t_start,
+            max_loss_pct=max_loss_pct,
+            n_steps=cfg.n_steps, max_boosts_per_step=cfg.max_boosts_per_step,
+        )
+        kw.update(overrides)
+        return cls(**kw)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {f: np.asarray(getattr(self, f)).tolist()
+             for f in SCENARIO_FIELDS}
+        d["n_steps"] = self.n_steps
+        d["max_boosts_per_step"] = self.max_boosts_per_step
+        return d
+
+
+def stack_scenarios(scenarios: Sequence[Scenario], axis: int = 0) -> Scenario:
+    """Stack single (or same-shape) scenarios into one batched Scenario.
+
+    Static aux structure must agree across all inputs.
+    """
+    scenarios = list(scenarios)
+    assert scenarios, "need at least one scenario"
+    aux0 = (scenarios[0].n_steps, scenarios[0].max_boosts_per_step)
+    for s in scenarios[1:]:
+        assert (s.n_steps, s.max_boosts_per_step) == aux0, \
+            "cannot stack scenarios with different static structure"
+    shape = jnp.broadcast_shapes(*(s.batch_shape for s in scenarios))
+    mats = [s.broadcast_leaves(shape) for s in scenarios]
+    return scenarios[0].replace(**{
+        f: jnp.stack([jnp.asarray(getattr(m, f), jnp.float32) for m in mats],
+                     axis=axis)
+        for f in SCENARIO_FIELDS})
+
+
+def scenario_grid(base: Scenario | None = None, **axes) -> Scenario:
+    """Cartesian product of scenario knobs as an N-D broadcastable batch.
+
+    ``scenario_grid(max_loss_pct=[...], duty=[...])`` returns a Scenario
+    whose i-th swept leaf has shape ``(1,)*i + (len_i,) + (1,)*(N-1-i)``;
+    the batch shape is the full grid, but no leaf is materialised — the
+    simulator broadcasts lazily.
+    """
+    for name in axes:
+        assert name in SCENARIO_FIELDS, f"unknown scenario field {name!r}"
+    base = base or Scenario.nominal()
+    ndim = len(axes)
+    leaves = {}
+    for i, (name, values) in enumerate(axes.items()):
+        v = jnp.asarray(values, jnp.float32).reshape(-1)
+        shape = (1,) * i + (v.shape[0],) + (1,) * (ndim - 1 - i)
+        leaves[name] = v.reshape(shape)
+    return base.replace(**leaves)
+
+
+# --------------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LifetimeTrajectory:
+    """Structured result of :func:`repro.core.avs.simulate`.
+
+    Time-series leaves have shape ``batch_shape + (n_steps,)`` (``dv`` has a
+    trailing population axis); ``batch_shape`` mirrors the scenario batch
+    (possibly extended by a threshold/operator axis).
+    """
+
+    t: jnp.ndarray          # [..., T] wall-clock grid [s]
+    V: jnp.ndarray          # [..., T] supply voltage [V]
+    delay: jnp.ndarray      # [..., T] critical-path delay [s]
+    dvp: jnp.ndarray        # [..., T] PMOS ΔVth [mV]
+    dvn: jnp.ndarray        # [..., T] NMOS ΔVth [mV]
+    dv: jnp.ndarray         # [..., T, N_POP] per-population shifts [mV]
+
+    _FIELDS = ("t", "V", "delay", "dvp", "dvn", "dv")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def batch_shape(self) -> tuple:
+        return tuple(self.V.shape[:-1])
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.V.shape[-1])
+
+    def to_dict(self) -> Dict[str, jnp.ndarray]:
+        """Legacy ``run_lifetime`` dict layout (keys t/V/delay/dvp/dvn/dv)."""
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+    @classmethod
+    def from_dict(cls, d) -> "LifetimeTrajectory":
+        return cls(*(jnp.asarray(d[f]) for f in cls._FIELDS))
+
+    def __getitem__(self, idx) -> "LifetimeTrajectory":
+        """Index into the batch dimensions."""
+        return LifetimeTrajectory(*(getattr(self, f)[idx]
+                                    for f in self._FIELDS))
+
+    def reshape(self, batch_shape) -> "LifetimeTrajectory":
+        bs = tuple(batch_shape)
+        out = {}
+        for f in self._FIELDS:
+            x = getattr(self, f)
+            out[f] = x.reshape(bs + tuple(x.shape[len(self.batch_shape):]))
+        return LifetimeTrajectory(**out)
+
+    # ------------------------------------------------------------------ #
+    def final(self) -> Dict[str, np.ndarray]:
+        """End-of-life snapshot over the whole batch."""
+        return {
+            "v_final": np.asarray(self.V)[..., -1],
+            "delay_final": np.asarray(self.delay)[..., -1],
+            "dvp": np.asarray(self.dvp)[..., -1],
+            "dvn": np.asarray(self.dvn)[..., -1],
+            "dv": np.asarray(self.dv)[..., -1, :],
+        }
+
+    def age_index(self, age_s) -> np.ndarray:
+        """Grid index of wall-clock age(s) per batch cell (vectorised)."""
+        t = np.asarray(self.t)
+        age = np.asarray(age_s, np.float64)
+        age_b = np.broadcast_to(age, self.batch_shape) if self.batch_shape \
+            else age
+        idx = (t < age_b[..., None]).sum(axis=-1)
+        return np.clip(idx, 0, t.shape[-1] - 1)
+
+    def at_age(self, age_s) -> Dict[str, np.ndarray]:
+        """Snapshot every series at the given wall-clock age(s)."""
+        idx = self.age_index(age_s)
+        out = {}
+        for f in ("V", "delay", "dvp", "dvn"):
+            x = np.asarray(getattr(self, f))
+            out[f] = np.take_along_axis(x, idx[..., None], axis=-1)[..., 0]
+        return out

@@ -1,8 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Runs the aging-aware engine end-to-end on a reduced config: initialises
-params, sets the simulated device age, and generates batched tokens under
-the per-operator BERs the fault-tolerant AVS policy admits at that age.
+params, builds a :class:`repro.core.fleet.FleetRuntime` (``--n-devices``
+simulated accelerators of possibly different age), and generates batched
+tokens under the per-operator BERs the policy admits at each device's age.
 """
 from __future__ import annotations
 
@@ -12,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.runtime import AgingAwareRuntime
+from repro.core.fleet import FleetRuntime
 from repro.data import SyntheticLM
 from repro.serve.engine import ServeEngine
 from repro.train.steps import init_train_state
@@ -22,6 +23,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek_7b")
     ap.add_argument("--age-years", type=float, default=5.0)
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="fleet size; device i serves at age-years * "
+                         "(i+1)/n (a staggered-deployment fleet)")
+    ap.add_argument("--device", type=int, default=0,
+                    help="which fleet device the engine serves from")
+    ap.add_argument("--budget", type=float, default=0.5,
+                    help="accuracy budget [%% loss] of the policy")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
@@ -35,9 +43,14 @@ def main(argv=None):
 
     cfg = get_config(args.arch).reduced()
     params = init_train_state(cfg, jax.random.PRNGKey(0)).params
-    runtime = AgingAwareRuntime(fault_tolerant=not args.baseline_avs)
-    runtime.set_age(years=args.age_years)
-    engine = ServeEngine(cfg, params, runtime=runtime,
+    fleet = FleetRuntime(
+        n_devices=args.n_devices,
+        policy="baseline" if args.baseline_avs else "fault_tolerant",
+        max_loss_pct=args.budget)
+    for i in range(args.n_devices):
+        fleet.set_age(years=args.age_years * (i + 1) / args.n_devices,
+                      device=i)
+    engine = ServeEngine(cfg, params, runtime=fleet, device=args.device,
                          max_len=args.prompt_len + args.gen_len + 1,
                          use_systolic_kernel=args.use_kernel)
 
@@ -53,12 +66,18 @@ def main(argv=None):
             (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
 
     res = engine.generate(prompts, args.gen_len, **extra)
-    print(f"[serve] arch={cfg.name} age={res.age_years:.1f}y "
-          f"policy={'baseline' if args.baseline_avs else 'fault-tolerant'}")
+    pol = "baseline" if args.baseline_avs else "fault-tolerant"
+    print(f"[serve] arch={cfg.name} fleet={args.n_devices} dev={args.device} "
+          f"age={res.age_years:.1f}y policy={pol} budget={args.budget}%")
     print(f"[serve] per-op BER: " + ", ".join(
         f"{k}={v:.1e}" for k, v in sorted(res.bers.items())))
     print(f"[serve] est. array power: {res.power_w:.2f} W "
           f"(x{len(res.bers)} domains)")
+    if args.n_devices > 1:
+        ages = ", ".join(f"{a:.1f}y" for a in fleet.ages_years)
+        pw = ", ".join(f"{p:.2f}W" for p in fleet.fleet_power())
+        print(f"[serve] fleet ages: [{ages}]  power: [{pw}] "
+              f"(total {fleet.fleet_power().sum():.2f} W)")
     print(f"[serve] generated {res.tokens.shape} tokens; "
           f"first row: {res.tokens[0][:12].tolist()}")
     return res

@@ -1,7 +1,9 @@
 """Aging-aware serving engine — the paper's technique as a runtime feature.
 
-The engine owns an :class:`repro.core.runtime.AgingAwareRuntime`: one AVS
-voltage domain per operator class (the paper's Table II rows).  Before each
+The engine serves one device of an AVS runtime — a legacy
+:class:`repro.core.runtime.AgingAwareRuntime` or (the fleet-scale path) one
+:class:`repro.core.fleet.FleetRuntime` device — with one AVS voltage domain
+per operator class (the paper's Table II rows).  Before each
 generation call it snapshots the runtime's current per-operator BERs into a
 :class:`FaultConfig`, so every matmul executes at exactly the error rate the
 fault-tolerant AVS policy admits at the device's current age.  Advancing the
@@ -23,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
-from repro.core.runtime import AgingAwareRuntime
+from repro.core.fleet import FleetRuntime
 from repro.models.layers import FaultConfig
 from . import steps
 
@@ -38,11 +40,16 @@ class GenerateResult:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
-                 runtime: Optional[AgingAwareRuntime] = None,
+                 runtime=None, device: int = 0,
                  max_len: int = 512, use_systolic_kernel: bool = False,
                  seed: int = 0):
+        """``runtime`` accepts a legacy ``AgingAwareRuntime``, a vectorised
+        :class:`FleetRuntime` (served from fleet device ``device``), or any
+        object exposing ``op_bers / age_years / total_power``."""
         self.cfg = cfg
         self.params = params
+        if isinstance(runtime, FleetRuntime):
+            runtime = runtime.device(device)
         self.runtime = runtime
         self.max_len = max_len
         self.use_kernel = use_systolic_kernel

@@ -1,0 +1,82 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The real dependency is declared in ``pyproject.toml`` (``pip install
+-e .[test]``); this fallback keeps the property-test modules collectable and
+running in minimal environments.  It implements exactly the subset the test
+suite uses — ``given``, ``settings(max_examples=, deadline=)`` and the
+``integers / floats / sampled_from / booleans`` strategies — by drawing a
+small fixed-seed sample instead of performing adaptive search/shrinking.
+Coverage is therefore reduced (no shrinking, few examples); install the real
+package for full property testing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+# Cap per-test examples: the fallback is a smoke-level sample, and some
+# property tests (Pallas interpret-mode kernels) are expensive per example.
+_MAX_FALLBACK_EXAMPLES = 5
+_SEED = 0xA61
+
+
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd=None):
+        return self._draw(rnd or random.Random(_SEED))
+
+
+class strategies:  # noqa: N801 — mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+
+def settings(max_examples=10, deadline=None, **_kw):  # noqa: ARG001
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 10))
+            rnd = random.Random(_SEED)
+            for _ in range(min(n, _MAX_FALLBACK_EXAMPLES)):
+                drawn = {k: s._draw(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper supplies them, so the visible signature must omit them
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class HealthCheck:  # pragma: no cover — imported by some hypothesis users
+    all = staticmethod(lambda: [])

@@ -1,5 +1,17 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py fakes 512 devices."""
+import sys
+
+# Install-or-skip guard for the `hypothesis` test dependency (declared in
+# pyproject.toml's [test] extra): when it is absent, inject the deterministic
+# in-repo fallback so the six property-test modules still collect and run a
+# fixed-seed sample instead of erroring at import time.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+    sys.modules.setdefault("hypothesis", _hypothesis_fallback)
+
 import jax
 import numpy as np
 import pytest

@@ -100,6 +100,21 @@ def test_hci_gamma_bounds(cal):
             assert 0.0 < g <= 1.0
 
 
+def test_hci_gamma_closed_matches_numeric(cal):
+    """The traced simulator uses the closed form; it must agree with the
+    numeric linear-ramp integral it replaced, per population."""
+    for i in range(aging.N_POP):
+        if aging.IS_BTI[i]:
+            continue
+        B, n = float(cal.aging.B[i]), float(cal.aging.n[i])
+        numeric = aging.hci_gamma(B, V_NOM, n, num=4096)
+        closed = float(aging.hci_gamma_closed(B, V_NOM, n))
+        assert closed == pytest.approx(numeric, rel=1e-4), i
+    # small-x limit branch stays finite and -> 1
+    assert float(aging.hci_gamma_closed(1e-9, V_NOM, 0.5)) == \
+        pytest.approx(1.0, abs=1e-5)
+
+
 def test_totals_split(cal):
     dv = jnp.arange(1.0, 7.0)
     dvp, dvn = aging.totals(dv)

@@ -1,0 +1,289 @@
+"""Scenario-batched policy API: pytree round-trips, vmapped `simulate`
+equivalence, policy registry, and FleetRuntime fleet/single consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.artifacts import load_calibration
+from repro.core.avs import run_lifetime, simulate
+from repro.core.fleet import FleetRuntime
+from repro.core.policy import (BaselinePolicy, FaultTolerantPolicy,
+                               get_policy, register_policy, sweep_policy)
+from repro.core.resilience import OPERATORS
+from repro.core.runtime import AgingAwareRuntime
+from repro.core.scenario import (LifetimeTrajectory, Scenario, scenario_grid,
+                                 stack_scenarios)
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+# --------------------------------------------------------------------------- #
+# Scenario pytree mechanics
+# --------------------------------------------------------------------------- #
+def test_scenario_pytree_roundtrip():
+    scn = Scenario.nominal(duty=jnp.asarray([0.3, 0.5]), max_loss_pct=1.0)
+    leaves, treedef = jax.tree_util.tree_flatten(scn)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, Scenario)
+    assert back.n_steps == scn.n_steps
+    assert back.max_boosts_per_step == scn.max_boosts_per_step
+    np.testing.assert_array_equal(np.asarray(back.duty), np.asarray(scn.duty))
+    assert back.max_loss_pct == scn.max_loss_pct
+    assert scn.batch_shape == (2,)
+
+
+def test_scenario_jit_and_vmap():
+    scn = Scenario.nominal(duty=jnp.linspace(0.3, 0.7, 4),
+                           t_amb=jnp.linspace(290.0, 330.0, 4))
+
+    @jax.jit
+    def hottest(s: Scenario):
+        return jnp.max(jnp.asarray(s.t_amb) * jnp.asarray(s.duty))
+
+    assert float(hottest(scn)) == pytest.approx(330.0 * 0.7, rel=1e-6)
+
+    per = jax.vmap(lambda s: jnp.asarray(s.duty) + jnp.asarray(s.t_amb))(
+        scn.broadcast_leaves())
+    assert per.shape == (4,)
+
+
+def test_scenario_grid_and_stack():
+    g = scenario_grid(max_loss_pct=[0.1, 0.5, 2.0], duty=[0.3, 0.5])
+    assert g.batch_shape == (3, 2)
+    assert g.n_scenarios == 6
+    # swept leaves broadcast, unswept leaves stay scalar
+    assert jnp.shape(g.max_loss_pct) == (3, 1)
+    assert jnp.shape(g.duty) == (1, 2)
+    assert jnp.shape(g.toggle) == ()
+
+    s = stack_scenarios([Scenario.nominal(duty=0.4),
+                         Scenario.nominal(duty=0.6)])
+    assert s.batch_shape == (2,)
+    np.testing.assert_allclose(np.asarray(s.duty), [0.4, 0.6])
+
+    cell = g[2, 1]
+    assert cell.batch_shape == ()
+    assert float(cell.max_loss_pct) == pytest.approx(2.0)
+    assert float(cell.duty) == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------- #
+# simulate: batched == scalar, single trace
+# --------------------------------------------------------------------------- #
+def test_simulate_scalar_matches_run_lifetime(cal):
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    traj = simulate(cal.aging, cal.delay_poly, scn)
+    assert isinstance(traj, LifetimeTrajectory)
+    legacy = run_lifetime(cal.aging, cal.delay_poly, cal.lifetime_cfg,
+                          delay_max=cal.lifetime_cfg.t_clk)
+    np.testing.assert_allclose(np.asarray(traj.V), np.asarray(legacy["V"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(traj.dvp),
+                               np.asarray(legacy["dvp"]), rtol=1e-6)
+
+
+def test_simulate_batched_matches_scalar(cal):
+    """Acceptance: a 2-D sweep (3 budgets x 3 duty profiles x all operator
+    domains) in ONE vmapped call matches the per-scenario scalar path to
+    <=1e-5 relative error."""
+    base = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    grid = scenario_grid(base, max_loss_pct=[0.1, 0.5, 2.0],
+                         duty=[0.3, 0.5, 0.7])
+    policy = FaultTolerantPolicy(ber_model=cal.ber)
+    traj = sweep_policy(policy, cal.aging, cal.delay_poly, grid)
+    assert traj.batch_shape == (3, 3, len(OPERATORS))
+
+    for bi, di, oi in ((0, 0, 0), (1, 2, 5), (2, 1, 8)):
+        cell = grid[bi, di]
+        dmax = policy.thresholds(cell, OPERATORS)[oi]
+        scalar = simulate(cal.aging, cal.delay_poly, cell, delay_max=dmax)
+        for field in ("V", "delay", "dvp", "dvn"):
+            got = np.asarray(getattr(traj, field))[bi, di, oi]
+            want = np.asarray(getattr(scalar, field))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-12)
+
+
+def test_simulate_single_trace_for_any_batch(cal):
+    """The whole sweep must trace the delay polynomial ONCE (one vmapped
+    scan), not once per scenario: tracing executes Python, so a per-scenario
+    retrace inflates the call counter linearly with the batch."""
+    calls = {"n": 0}
+    poly = cal.delay_poly
+
+    class CountingPoly:
+        def __call__(self, dp, dn, V):
+            calls["n"] += 1
+            return poly(dp, dn, V)
+
+    counting = CountingPoly()
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+
+    calls["n"] = 0
+    simulate(cal.aging, poly, scn, delay_max=cal.lifetime_cfg.t_clk,
+             recovery=True)  # warm any global caches
+    simulate(cal.aging, counting, scn, delay_max=cal.lifetime_cfg.t_clk)
+    scalar_traces = calls["n"]
+    assert scalar_traces > 0
+
+    grid = scenario_grid(scn, max_loss_pct=[0.1, 0.5, 2.0],
+                         duty=[0.3, 0.5, 0.7])
+    calls["n"] = 0
+    sweep_policy(FaultTolerantPolicy(ber_model=cal.ber), cal.aging, counting,
+                 grid)
+    batched_traces = calls["n"]
+    # 27 lifetimes must not cost 27x the traces of one lifetime
+    assert batched_traces <= scalar_traces + 2, \
+        (batched_traces, scalar_traces)
+
+
+def test_simulate_batches_activity_knobs(cal):
+    """duty/toggle/t_amb are computed inside the traced fn: batching them
+    must change the physics (more duty -> more BTI aging)."""
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg).replace(
+        duty=jnp.asarray([0.2, 0.8]))
+    traj = simulate(cal.aging, cal.delay_poly, scn,
+                    delay_max=cal.lifetime_cfg.t_clk, avs_enabled=False)
+    dvp = np.asarray(traj.dvp)[..., -1]
+    assert dvp[1] > dvp[0] * 1.2
+
+    hot = simulate(cal.aging, cal.delay_poly,
+                   Scenario.from_lifetime_config(cal.lifetime_cfg).replace(
+                       t_amb=jnp.asarray([298.15, 348.15])),
+                   avs_enabled=False)
+    d = np.asarray(hot.dvp)[..., -1]
+    assert d[1] > d[0]          # hotter device ages faster
+
+
+# --------------------------------------------------------------------------- #
+# Policy protocol + registry
+# --------------------------------------------------------------------------- #
+def test_policy_registry(cal):
+    bl = get_policy("baseline")
+    assert isinstance(bl, BaselinePolicy)
+    ft = get_policy("fault_tolerant", ber_model=cal.ber)
+    assert isinstance(ft, FaultTolerantPolicy)
+    with pytest.raises(KeyError):
+        get_policy("nope")
+
+    @register_policy
+    @dataclasses.dataclass(frozen=True)
+    class FixedPolicy:
+        name = "fixed_test_policy"
+        dmax: float = 1.7e-9
+
+        def thresholds(self, scenario, operators=OPERATORS):
+            return jnp.full(scenario.batch_shape + (len(operators),),
+                            self.dmax, jnp.float32)
+
+    assert isinstance(get_policy("fixed_test_policy"), FixedPolicy)
+
+
+def test_thresholds_match_legacy_delay_max(cal):
+    """Traced thresholds must agree with the legacy float64 inversion."""
+    for budget in (0.1, 0.5, 2.0):
+        pol = FaultTolerantPolicy(ber_model=cal.ber, max_loss_pct=budget)
+        legacy = pol.delay_max()
+        scn = Scenario.nominal(max_loss_pct=budget)
+        traced = np.asarray(pol.thresholds(scn, OPERATORS))
+        for i, op in enumerate(OPERATORS):
+            assert traced[i] == pytest.approx(legacy[op], rel=1e-5), op
+
+
+def test_policy_pinned_budget_overrides_scenario(cal):
+    """An explicit policy budget wins over the scenario's; the default
+    (None) defers to the scenario — both paths stay consistent with the
+    legacy delay_max()."""
+    pinned = FaultTolerantPolicy(ber_model=cal.ber, max_loss_pct=2.0)
+    scn_05 = Scenario.nominal()                       # budget 0.5
+    got = np.asarray(pinned.thresholds(scn_05, OPERATORS))
+    legacy = pinned.delay_max()
+    for i, op in enumerate(OPERATORS):
+        assert got[i] == pytest.approx(legacy[op], rel=1e-5), op
+
+    deferring = FaultTolerantPolicy(ber_model=cal.ber)
+    got2 = np.asarray(deferring.thresholds(
+        Scenario.nominal(max_loss_pct=2.0), OPERATORS))
+    np.testing.assert_allclose(got2, got, rtol=1e-6)
+
+
+def test_thresholds_batch_over_budget(cal):
+    pol = FaultTolerantPolicy(ber_model=cal.ber)
+    scn = Scenario.nominal(max_loss_pct=jnp.asarray([0.1, 0.5, 2.0]))
+    th = np.asarray(pol.thresholds(scn, OPERATORS))
+    assert th.shape == (3, len(OPERATORS))
+    # larger budget never tightens any threshold
+    assert (np.diff(th, axis=0) >= -1e-15).all()
+
+
+# --------------------------------------------------------------------------- #
+# FleetRuntime
+# --------------------------------------------------------------------------- #
+def test_fleet_n1_matches_aging_aware_runtime():
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    fleet = FleetRuntime(n_devices=1, policy="fault_tolerant")
+    for years in (0.5, 5.0, 9.5):
+        rt.set_age(years=years)
+        fleet.set_age(years=years)
+        legacy, new = rt.summary(), fleet.summary(device=0)
+        assert set(legacy) == set(new)
+        for op in legacy:
+            for k in ("v_dd", "delay", "dvth_p_mv", "dvth_n_mv", "ber",
+                      "power_w"):
+                assert new[op][k] == pytest.approx(legacy[op][k],
+                                                   rel=1e-6, abs=1e-30), \
+                    (op, k, years)
+        assert fleet.total_power() == pytest.approx(rt.total_power(),
+                                                    rel=1e-6)
+
+
+def test_fleet_multi_device_consistency():
+    """Same scenario, same age -> every device identical to the single-
+    device path; heterogeneous ages -> monotone aging across the fleet."""
+    fleet = FleetRuntime(n_devices=4, policy="fault_tolerant")
+    single = FleetRuntime(n_devices=1, policy="fault_tolerant")
+    fleet.set_age(years=7.0)
+    single.set_age(years=7.0)
+    snap = fleet.snapshot()
+    ref = single.snapshot()
+    for f in ("v_dd", "delay", "dvth_p_mv", "dvth_n_mv", "ber", "power_w"):
+        arr = getattr(snap, f)
+        assert arr.shape == (4, len(OPERATORS))
+        np.testing.assert_allclose(arr, np.broadcast_to(getattr(ref, f),
+                                                        arr.shape), rtol=1e-7)
+
+    for i, years in enumerate((1.0, 4.0, 7.0, 9.9)):
+        fleet.set_age(years=years, device=i)
+    dvp = fleet.snapshot().dvth_p_mv
+    assert (np.diff(dvp, axis=0) >= -1e-9).all()    # older -> more aged
+    assert fleet.fleet_power().shape == (4,)
+
+
+def test_fleet_per_device_scenarios():
+    """A (N,)-batched scenario gives each device its own mission profile."""
+    scn = Scenario.nominal(duty=jnp.asarray([0.2, 0.8]))
+    fleet = FleetRuntime(scenario=scn, policy="fault_tolerant")
+    assert fleet.n_devices == 2
+    fleet.set_age(years=9.5)
+    snap = fleet.snapshot()
+    # the high-duty device has aged strictly more in every domain
+    assert (snap.dvth_p_mv[1] > snap.dvth_p_mv[0]).all()
+
+
+def test_fleet_device_view_protocol():
+    fleet = FleetRuntime(n_devices=2)
+    dev = fleet.device(1)
+    dev.set_age(years=3.0)
+    assert dev.age_years == pytest.approx(3.0)
+    assert fleet.ages_years[0] == 0.0               # untouched
+    bers = dev.op_bers()
+    assert set(bers) == set(OPERATORS)
+    st = dev.domain_state("o")
+    assert st.power_w > 0 and st.v_dd >= 0.9 - 1e-6
+    dev.advance(365.25 * 24 * 3600.0)
+    assert dev.age_years == pytest.approx(4.0)
