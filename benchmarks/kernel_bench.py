@@ -1,14 +1,21 @@
-"""Benchmark: Pallas kernel block-shape sweep (structural, dry-run style).
+"""Benchmark: Pallas kernel block-shape sweep + fused-vs-unfused injection.
 
-No TPU wall-clock exists in this container, so the sweep reports the
+No TPU wall-clock exists in this container, so the sweeps report the
 *structural* determinants of kernel performance for each BlockSpec choice:
 VMEM working set (must fit ~16 MiB with double buffering), MXU alignment,
-grid size, and arithmetic intensity — plus correctness vs the jnp oracle in
-interpret mode.  The chosen default (256x256x256) mirrors the paper's
-256x256 systolic array and is the one EXPERIMENTS.md §Perf iterates from.
+grid size, arithmetic intensity and — for the fused aged-matmul — the HBM
+bytes each realisation moves, plus correctness vs the jnp oracles in
+interpret mode.  Interpret wall-clock is reported for relative sanity only
+(it is a CPU emulation; see EXPERIMENTS.md §Perf for the methodology and
+the recorded numbers).  The chosen default (256x256x256) mirrors the
+paper's 256x256 systolic array.
+
+``--quick`` runs a reduced sweep (one shape, two blocks, two BERs) used by
+the CI docs job to exercise the fused path on every PR.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -48,7 +55,144 @@ def sweep_blocks(M=512, K=512, N=512):
     return rows
 
 
-def run() -> str:
+# --------------------------------------------------------------------------- #
+# fused vs three-pass injection
+# --------------------------------------------------------------------------- #
+def _hbm_bytes(M, K, N, bm, bn, *, fused: bool):
+    """Analytic HBM traffic of one faulted+dequantised matmul.
+
+    Counts block revisits (A is streamed once per N-tile column, B once per
+    M-tile row) identically for both paths; the difference is everything
+    downstream of the accumulator flush.
+    """
+    gm, gn = M // bm, N // bn
+    matmul_reads = M * K * gn + K * N * gm          # int8 operands
+    scales = 4 * (M + N)
+    out_f32 = 4 * M * N
+    if fused:
+        # upset + dequant happen in VMEM during the flush; only the float
+        # output is ever written.
+        return matmul_reads + scales + out_f32
+    # three-pass: int32 acc round-trips, plus two output-sized random
+    # arrays (u float32 + pos int32) padded to the (rows, 128) layout.
+    words = M * N
+    rows = -(-words // 128)
+    wpad = -(-rows // 256) * 256 * 128              # (rows, 128) padding
+    acc_write = 4 * words
+    rng_write = 8 * wpad                            # u + pos materialised
+    flip_pass = (4 + 8) * wpad + 4 * wpad           # read acc+u+pos, write
+    dequant = 4 * words + scales + out_f32          # read acc, write float
+    return matmul_reads + acc_write + rng_write + flip_pass + dequant
+
+
+def _run_three_pass(a, b, xs, ws, ber, key, bm=256, bn=256, bk=256):
+    acc = ops.quantized_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    acc = ops.inject_bitflips(acc, ber, key, interpret=True)
+    return acc.astype(jnp.float32) * xs * ws
+
+
+def _traced_array_bytes(fn, *args) -> int:
+    """Bytes of every array the traced computation materialises.
+
+    Walks the jaxpr (recursing into pjit/call sub-jaxprs) and sums the
+    sizes of all equation outputs.  This measures the path as actually
+    staged — a regression that reintroduces output-sized randoms or an
+    extra accumulator round-trip shows up here, independently of the
+    analytic model above.
+    """
+    def walk(jaxpr) -> int:
+        total = 0
+        for eqn in jaxpr.eqns:
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                total += walk(getattr(inner, "jaxpr", inner))
+            else:
+                total += sum(v.aval.size * v.aval.dtype.itemsize
+                             for v in eqn.outvars
+                             if hasattr(v.aval, "size"))
+        return total
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def sweep_fused(quick: bool = False):
+    shapes = ((256, 256, 256),) if quick else ((256, 256, 256),
+                                               (512, 512, 512))
+    blocks = ((128, 128, 128), (256, 256, 256))
+    bers = (0.0, 1e-3) if quick else (0.0, 1e-4, 1e-3)
+    rows, traced, ok_parity, ok_bytes, ok_traced = [], [], True, True, True
+    for M, K, N in shapes:
+        ka, kb = jax.random.split(jax.random.PRNGKey(1))
+        a = jax.random.randint(ka, (M, K), -128, 128, jnp.int8)
+        b = jax.random.randint(kb, (K, N), -128, 128, jnp.int8)
+        xs = jax.random.uniform(jax.random.PRNGKey(2), (M, 1)) + 0.5
+        ws = jax.random.uniform(jax.random.PRNGKey(3), (1, N)) + 0.5
+        # structural check on the ACTUAL staged computation (not the
+        # analytic model): bytes of every array each path materialises
+        tb3 = _traced_array_bytes(
+            lambda aa, bb: _run_three_pass(aa, bb, xs, ws, 1e-3,
+                                           jax.random.PRNGKey(4)), a, b)
+        tbf = _traced_array_bytes(
+            lambda aa, bb: ops.fused_aged_matmul(aa, bb, xs, ws, ber=1e-3,
+                                                 seed=4, interpret=True),
+            a, b)
+        ok_traced &= tbf < tb3
+        traced.append([f"{M}x{K}x{N}", f"{tb3 / 2**20:.2f} MiB",
+                       f"{tbf / 2**20:.2f} MiB", f"{tb3 / tbf:.2f}x"])
+        for bm, bn, bk in blocks:
+            if M % bm or N % bn or K % bk:
+                continue
+            for ber in bers:
+                # warmup first so trace/compile does not pollute the timing
+                key = jax.random.PRNGKey(4)
+                jax.block_until_ready(_run_three_pass(a, b, xs, ws, ber,
+                                                      key, bm, bn, bk))
+                t0 = time.time()
+                out3 = _run_three_pass(a, b, xs, ws, ber, key, bm, bn, bk)
+                jax.block_until_ready(out3)
+                t3 = time.time() - t0
+                jax.block_until_ready(
+                    ops.fused_aged_matmul(a, b, xs, ws, ber=ber, seed=4,
+                                          bm=bm, bn=bn, bk=bk,
+                                          interpret=True))
+                t0 = time.time()
+                outf = ops.fused_aged_matmul(a, b, xs, ws, ber=ber, seed=4,
+                                             bm=bm, bn=bn, bk=bk,
+                                             interpret=True)
+                jax.block_until_ready(outf)
+                tf = time.time() - t0
+                exp = ref.fused_aged_matmul_ref(a, b, xs, ws, ber, 4,
+                                                bm=bm, bn=bn)
+                parity = bool((outf == exp).all())
+                ok_parity &= parity
+                b3 = _hbm_bytes(M, K, N, bm, bn, fused=False)
+                bf = _hbm_bytes(M, K, N, bm, bn, fused=True)
+                ok_bytes &= bf < b3
+                rows.append([f"{M}x{K}x{N}", f"{bm}x{bn}x{bk}",
+                             f"{ber:.0e}",
+                             f"{b3 / 2**20:.2f} MiB", f"{bf / 2**20:.2f} MiB",
+                             f"{b3 / bf:.2f}x",
+                             "OK" if parity else "MISMATCH",
+                             f"{t3 * 1e3:.0f}ms", f"{tf * 1e3:.0f}ms"])
+    txt = table("Fused aged-matmul vs three-pass (HBM bytes analytic, "
+                "wall-clock interpret-mode)",
+                ["shape MxKxN", "block", "BER", "3-pass HBM", "fused HBM",
+                 "saved", "vs oracle", "3-pass t", "fused t"], rows)
+    txt += "\n" + table("Arrays materialised by the traced computation "
+                        "(jaxpr walk — regression guard)",
+                        ["shape MxKxN", "3-pass staged", "fused staged",
+                         "ratio"], traced)
+    txt += "\n" + check("fused path bit-exact vs counter oracle", ok_parity)
+    txt += "\n" + check("fused path moves strictly fewer HBM bytes "
+                        "(analytic model)", ok_bytes)
+    txt += "\n" + check("fused graph stages strictly fewer array bytes "
+                        "(traced jaxpr)", ok_traced)
+    return txt
+
+
+def run(quick: bool = False) -> str:
+    if quick:
+        txt = sweep_fused(quick=True)
+        return txt
     rows = sweep_blocks()
     txt = table("Systolic int8 matmul — BlockSpec sweep (structural)",
                 ["block (bm,bn,bk)", "VMEM set", "2x-buf VMEM%", "grid",
@@ -71,8 +215,16 @@ def run() -> str:
     fits = all(float(r[2].rstrip("%")) < 100 for r in rows)
     txt += "\n" + check("all block shapes match oracle", ok_all)
     txt += "\n" + check("all double-buffered working sets fit VMEM", fits)
+    txt += "\n" + sweep_fused(quick=False)
     return txt
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced fused-path sweep for CI")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(out)
+    if "MISMATCH" in out or "[FAIL]" in out:
+        raise SystemExit(1)

@@ -1,12 +1,17 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-* :mod:`systolic_matmul` — int8 x int8 -> int32 MXU-tiled matmul (the
+* :mod:`systolic_matmul`   — int8 x int8 -> int32 MXU-tiled matmul (the
   paper's 256x256 systolic array, TPU-native).
-* :mod:`bitflip`         — BER-parameterised accumulator bit-error injection.
-* :mod:`ops`             — jit'd public wrappers (padding, interpret switch).
-* :mod:`ref`             — pure-jnp oracles.
+* :mod:`bitflip`           — BER-parameterised accumulator bit-error
+  injection (standalone three-pass form).
+* :mod:`fused_aged_matmul` — matmul + in-kernel PRNG upset injection +
+  dequant in ONE pass (the serve hot path).
+* :mod:`ops`               — jit'd public wrappers (padding, interpret
+  switch).
+* :mod:`ref`               — pure-jnp oracles.
 """
-from .ops import (aged_linear, inject_bitflips, quantized_matmul,  # noqa: F401
-                  quantize_int8, make_flip_randoms)
+from .ops import (aged_linear, fused_aged_matmul, inject_bitflips,  # noqa: F401
+                  quantized_matmul, quantize_int8, make_flip_randoms,
+                  seed_from_key)
 from .systolic_matmul import systolic_matmul  # noqa: F401
 from .bitflip import bitflip_words  # noqa: F401

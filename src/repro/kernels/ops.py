@@ -7,6 +7,10 @@
 * :func:`aged_linear` is the model-facing op: a float matmul executed the
   way the paper's accelerator executes it — int8 quantisation, int32
   systolic accumulation, BER-parameterised accumulator bit upsets, dequant.
+  Its default fast path is ONE fused kernel (:func:`fused_aged_matmul`):
+  upsets drawn by the in-kernel PRNG at the accumulator flush, dequant
+  fused, nothing but ``a``, ``b``, scales and the float output touching
+  HBM.  The seed-free three-pass route survives as the oracle fallback.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import numpy as np
 
 from . import ref
 from .bitflip import bitflip_words
+from .fused_aged_matmul import fused_aged_matmul as _fused_aged_matmul_kernel
 from .systolic_matmul import systolic_matmul
 
 
@@ -40,21 +45,25 @@ def quantized_matmul(a: jax.Array, b: jax.Array, *, bm: int = 256,
     """int8 (M,K) @ int8 (K,N) -> int32 (M,N), arbitrary shapes (padded)."""
     if interpret is None:
         interpret = _default_interpret()
-    M, N = a.shape[0], b.shape[1]
-    bm_, bn_, bk_ = (min(bm, _ceil_mult(M)), min(bn, _ceil_mult(N)),
-                     min(bk, _ceil_mult(a.shape[1])))
-    ap = _pad_to(a, bm_, bk_)
-    bp = _pad_to(b, bk_, bn_)
+    (bm_, bn_, bk_), ap, bp = _resolve_blocks(a, b, bm, bn, bk)
     out = systolic_matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
-    return out[:M, :N]
+    return out[:a.shape[0], :b.shape[1]]
 
 
 def _ceil_mult(dim: int, base: int = 128) -> int:
-    """Smallest hardware-aligned block >= min(dim, base)."""
+    """Requested block ``base``, shrunk to a pow2 >= 8 for small dims."""
     if dim >= base:
         return base
     # small test shapes: round up to the sublane multiple
     return max(8, int(2 ** np.ceil(np.log2(max(dim, 1)))))
+
+
+def _resolve_blocks(a: jax.Array, b: jax.Array, bm: int, bn: int, bk: int):
+    """Shared preamble of the matmul wrappers: honor the requested block
+    shape (shrunk for small dims) and zero-pad operands to multiples."""
+    bm_, bn_, bk_ = (_ceil_mult(a.shape[0], bm), _ceil_mult(b.shape[1], bn),
+                     _ceil_mult(a.shape[1], bk))
+    return (bm_, bn_, bk_), _pad_to(a, bm_, bk_), _pad_to(b, bk_, bn_)
 
 
 def make_flip_randoms(key: jax.Array, shape: tuple[int, ...]):
@@ -79,12 +88,48 @@ def inject_bitflips(x: jax.Array, ber, key: jax.Array, *,
     block_rows = 256
     rows = -(-n // 128)
     rows_pad = -(-rows // block_rows) * block_rows
-    xf = jnp.resize(x.reshape(-1), (rows_pad * 128,)).reshape(rows_pad, 128)
+    # zero-pad (NOT jnp.resize, which tiles real accumulator words into the
+    # pad region — wasted RNG spent flipping copies of live data)
+    xf = jnp.pad(x.reshape(-1), (0, rows_pad * 128 - n)).reshape(rows_pad,
+                                                                 128)
     u, pos = make_flip_randoms(key, (rows_pad, 128))
     q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
     out = bitflip_words(xf, u, pos, q[None], block_rows=block_rows,
                         interpret=interpret)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def fused_aged_matmul(a: jax.Array, b: jax.Array,
+                      xs: jax.Array | None = None,
+                      ws: jax.Array | None = None, *, ber=0.0, seed=0,
+                      bm: int = 256, bn: int = 256, bk: int = 256,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused int8 matmul + in-accumulator bit upsets, arbitrary shapes.
+
+    One kernel pass replaces ``quantized_matmul`` -> ``make_flip_randoms``
+    -> ``inject_bitflips``: the upset is applied to the accumulator tile in
+    VMEM during the K-final flush, keyed on ``(seed, tile)``, so no
+    output-sized random arrays and no extra int32 HBM round-trip exist.
+    With scales ``xs (M, 1)`` / ``ws (1, N)`` the dequant epilogue is fused
+    as well and the result is float32.
+    """
+    assert (xs is None) == (ws is None), "pass both scales or neither"
+    if interpret is None:
+        interpret = _default_interpret()
+    M, N = a.shape[0], b.shape[1]
+    (bm_, bn_, bk_), ap, bp = _resolve_blocks(a, b, bm, bn, bk)
+    if xs is not None:
+        xs = _pad_to(xs, bm_, 1)
+        ws = _pad_to(ws, 1, bn_)
+    out = _fused_aged_matmul_kernel(ap, bp, xs, ws, ber, seed, bm=bm_,
+                                    bn=bn_, bk=bk_, interpret=interpret)
+    return out[:M, :N]
+
+
+def seed_from_key(key: jax.Array) -> jax.Array:
+    """Derive the fused kernel's int32 seed from a ``jax.random`` key."""
+    return jax.random.bits(key, (), jnp.uint32).astype(jnp.int32)
 
 
 def quantize_int8(x: jax.Array, axis: int = -1):
@@ -97,25 +142,44 @@ def quantize_int8(x: jax.Array, axis: int = -1):
 
 def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
                 key: jax.Array | None = None,
+                seed: jax.Array | None = None,
                 interpret: bool | None = None,
-                use_kernel: bool = True) -> jax.Array:
+                use_kernel: bool = True,
+                fused: bool = True) -> jax.Array:
     """``x (.., K) @ w (K, N)`` executed as the paper's systolic array does.
 
     Quantise activations per-row and weights per-column to int8, multiply
     with int32 accumulation, inject accumulator bit errors at ``ber``, then
     dequantise.  ``ber=0`` with ``use_kernel=False`` is the clean fast path
     used during training.
+
+    Injection is requested by passing ``seed`` (int32 scalar) or ``key``
+    (a ``jax.random`` key; hashed down to a seed for the fused path).  With
+    ``fused=True`` (default) and ``use_kernel=True`` the faulted matmul is
+    ONE kernel — upset + dequant fused into the flush step, no materialised
+    randoms, no int32 HBM round-trip.  ``fused=False`` keeps the original
+    three-pass route (matmul -> ``make_flip_randoms`` -> ``bitflip_words``),
+    retained as the oracle / fallback path.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     xq, xs = quantize_int8(x2, axis=-1)
     wq, ws = quantize_int8(w, axis=0)
+    inject = key is not None or seed is not None
+    if use_kernel and fused and inject:
+        if seed is None:
+            seed = seed_from_key(key)
+        out = fused_aged_matmul(xq, wq, xs, ws, ber=ber, seed=seed,
+                                interpret=interpret)
+        return out.reshape(*lead, w.shape[1]).astype(x.dtype)
     if use_kernel:
         acc = quantized_matmul(xq, wq, interpret=interpret)
     else:
         acc = ref.systolic_matmul_ref(xq, wq)
-    if key is not None:
+    if inject:
+        if key is None:
+            key = jax.random.PRNGKey(seed)
         acc = inject_bitflips(acc, ber, key, interpret=interpret)
     out = acc.astype(jnp.float32) * xs * ws
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)

@@ -17,3 +17,35 @@ def bitflip_words_ref(x: jax.Array, u: jax.Array, pos: jax.Array,
     """Oracle for the bit-flip kernel on identical random inputs."""
     mask = jnp.int32(1) << pos.astype(jnp.int32)
     return jnp.where(u < q[0], jnp.bitwise_xor(x, mask), x)
+
+
+def fused_aged_matmul_ref(a: jax.Array, b: jax.Array,
+                          xs: jax.Array | None, ws: jax.Array | None,
+                          ber, seed, *, bm: int = 256,
+                          bn: int = 256) -> jax.Array:
+    """Counter-based oracle for the fused kernel's interpret-mode path.
+
+    Reproduces the in-kernel counter PRNG *bit-exactly* in plain jnp: each
+    word's draw is ``counter_bits(word offset in its (bm, bn) tile,
+    hash(seed, tile_id))``, with ``tile_id = i * grid_n + j`` exactly as the
+    flush step computes it.  Same padded-shape contract as the kernel.
+    """
+    from .fused_aged_matmul import counter_bits, upset_words
+
+    acc = systolic_matmul_ref(a, b)
+    M, N = acc.shape
+    assert M % bm == 0 and N % bn == 0, (acc.shape, bm, bn)
+    grid_n = N // bn
+    row = jnp.arange(M, dtype=jnp.uint32)[:, None]
+    col = jnp.arange(N, dtype=jnp.uint32)[None, :]
+    tile_id = (row // jnp.uint32(bm)) * jnp.uint32(grid_n) \
+        + col // jnp.uint32(bn)
+    offset = (row % jnp.uint32(bm)) * jnp.uint32(bn) + col % jnp.uint32(bn)
+    bits = counter_bits(offset, jnp.asarray(seed, jnp.int32)
+                        .astype(jnp.uint32), tile_id)
+    q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
+    acc = upset_words(acc, bits, q)
+    if xs is None:
+        return acc
+    return acc.astype(jnp.float32) * xs.astype(jnp.float32) \
+        * ws.astype(jnp.float32)

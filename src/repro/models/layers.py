@@ -21,10 +21,20 @@ from repro.kernels import ops as kops
 
 @dataclasses.dataclass(frozen=True)
 class FaultConfig:
-    """Per-operator error-injection config for serving-time evaluation."""
+    """Per-operator error-injection config for serving-time evaluation.
+
+    Randomness enters the weight matmuls as *seeds*, not materialised
+    random arrays: :meth:`seed_for` hashes (base key, operator, salt) down
+    to an int32 scalar that the fused kernel's in-core PRNG expands
+    in-register.  ``fused=False`` routes through the legacy three-pass
+    injection (kept as the oracle path); the batched qkt/sv activation
+    matmuls always use it (:func:`op_batched_matmul` has no 2-D tiling to
+    fuse into).
+    """
     bers: Dict[str, jax.Array]          # op name -> scalar BER
     key: jax.Array                      # base PRNG key
     use_systolic_kernel: bool = True    # int8 Pallas path for weight matmuls
+    fused: bool = True                  # single-pass in-kernel injection
 
     def ber_for(self, op: str):
         return self.bers.get(op, jnp.float32(0.0))
@@ -32,6 +42,10 @@ class FaultConfig:
     def key_for(self, op: str, salt) -> jax.Array:
         k = jax.random.fold_in(self.key, _op_salt(op))
         return jax.random.fold_in(k, salt)
+
+    def seed_for(self, op: str, salt) -> jax.Array:
+        """int32 seed for the fused kernel's per-tile PRNG streams."""
+        return kops.seed_from_key(self.key_for(op, salt))
 
 
 _OP_IDS = {op: i for i, op in enumerate(
@@ -48,9 +62,14 @@ def op_linear(x: jax.Array, w: jax.Array, op: str,
     """``x (..., K) @ w (K, N)`` through the operator domain ``op``."""
     if fi is None:
         return x @ w
+    if fi.fused and fi.use_systolic_kernel:
+        return kops.aged_linear(
+            x, w, ber=fi.ber_for(op), seed=fi.seed_for(op, salt),
+            use_kernel=True, fused=True)
+    # legacy routes keep the full 64-bit key stream (pre-fused behaviour)
     return kops.aged_linear(
         x, w, ber=fi.ber_for(op), key=fi.key_for(op, salt),
-        use_kernel=fi.use_systolic_kernel)
+        use_kernel=fi.use_systolic_kernel, fused=False)
 
 
 def op_einsum(spec: str, x: jax.Array, w: jax.Array, op: str,

@@ -42,10 +42,17 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  runtime=None, device: int = 0,
                  max_len: int = 512, use_systolic_kernel: bool = False,
-                 seed: int = 0):
+                 use_fused_kernel: bool = True, seed: int = 0):
         """``runtime`` accepts a legacy ``AgingAwareRuntime``, a vectorised
         :class:`FleetRuntime` (served from fleet device ``device``), or any
-        object exposing ``op_bers / age_years / total_power``."""
+        object exposing ``op_bers / age_years / total_power``.
+
+        With ``use_systolic_kernel=True`` every weight matmul runs on the
+        Pallas int8 path; ``use_fused_kernel`` (default) selects the
+        single-pass kernel that draws upsets with its in-core PRNG from a
+        per-(call, operator) seed — the engine hands the graph seeds, never
+        materialised random tensors.  Set it False to route through the
+        legacy three-pass injection (the oracle path)."""
         self.cfg = cfg
         self.params = params
         if isinstance(runtime, FleetRuntime):
@@ -53,6 +60,7 @@ class ServeEngine:
         self.runtime = runtime
         self.max_len = max_len
         self.use_kernel = use_systolic_kernel
+        self.use_fused = use_fused_kernel
         self._key = jax.random.PRNGKey(seed)
         self._prefill = None
         self._decode = None
@@ -65,7 +73,8 @@ class ServeEngine:
         bers = {op: jnp.float32(ber)
                 for op, ber in self.runtime.op_bers().items()}
         return FaultConfig(bers=bers, key=sub,
-                           use_systolic_kernel=self.use_kernel)
+                           use_systolic_kernel=self.use_kernel,
+                           fused=self.use_fused)
 
     def _build(self, fi: Optional[FaultConfig]):
         cfg = self.cfg

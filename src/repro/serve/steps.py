@@ -7,8 +7,13 @@ from ``repro.distributed.sharding.cache_specs`` (sequence-sharded over
 "model" when KV heads cannot split — partial-softmax decode attention).
 
 Fault injection: ``fi`` (a ``repro.models.layers.FaultConfig``) threads the
-per-operator BERs from the AVS runtime into every matmul domain.  ``fi=None``
-lowers the clean graph (what the roofline measures).
+per-operator BERs from the AVS runtime into every matmul domain.  The
+config carries only scalars — BERs plus a base key hashed to per-operator
+int32 *seeds* that the fused kernel expands in-register, so the weight
+matmuls (``op_linear`` domains) lower with no output-sized random arrays.
+The activation x activation qkt/sv domains (``op_batched_matmul``) still
+route through the three-pass injection.  ``fi=None`` lowers the clean
+graph (what the roofline measures).
 """
 from __future__ import annotations
 

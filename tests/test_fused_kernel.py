@@ -1,0 +1,174 @@
+"""Fused aged-matmul kernel (in-kernel PRNG injection) vs the counter
+oracle, in interpret mode.
+
+The interpret path uses the counter-based PRNG, which
+``ref.fused_aged_matmul_ref`` reproduces bit-exactly — so parity here is
+*equality*, not tolerance.  Statistical checks (flip rate within 3 sigma of
+``q = 1-(1-p)**32`` per word) guard the upset model itself; they are
+deterministic given the fixed seeds, so no flakes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_aged_matmul import fused_aged_matmul
+
+
+def _mk(m, k, n, seed=0):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.randint(ka, (m, k), -128, 128, jnp.int8)
+    b = jax.random.randint(kb, (k, n), -128, 128, jnp.int8)
+    return a, b
+
+
+# --------------------------------------------------------------------------- #
+# parity vs the counter oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("ber", [0.0, 1e-4, 1e-3])
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (256, 256, 256)])
+def test_fused_matches_counter_oracle(ber, bm, bn, bk):
+    a, b = _mk(256, 512, 256)
+    out = fused_aged_matmul(a, b, None, None, ber, 42, bm=bm, bn=bn, bk=bk,
+                            interpret=True)
+    exp = ref.fused_aged_matmul_ref(a, b, None, None, ber, 42, bm=bm, bn=bn)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_fused_ber_zero_is_exact_matmul():
+    """At BER=0 the fused kernel IS the systolic matmul — bit for bit."""
+    a, b = _mk(256, 256, 256)
+    out = fused_aged_matmul(a, b, None, None, 0.0, 123, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.systolic_matmul_ref(a, b)))
+
+
+def test_fused_dequant_epilogue_exact_at_ber_zero():
+    a, b = _mk(256, 256, 256, seed=1)
+    xs = jax.random.uniform(jax.random.PRNGKey(2), (256, 1)) + 0.5
+    ws = jax.random.uniform(jax.random.PRNGKey(3), (1, 256)) + 0.5
+    out = fused_aged_matmul(a, b, xs, ws, 0.0, 7, interpret=True)
+    exp = ref.systolic_matmul_ref(a, b).astype(jnp.float32) * xs * ws
+    assert out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("ber", [1e-4, 1e-3])
+def test_fused_flip_rate_within_3_sigma(ber):
+    a, b = _mk(512, 256, 512, seed=2)
+    clean = ref.systolic_matmul_ref(a, b)
+    out = fused_aged_matmul(a, b, None, None, ber, 9, interpret=True)
+    q = 1 - (1 - ber) ** 32
+    n = clean.size
+    rate = float(jnp.mean(out != clean))
+    tol = 3 * np.sqrt(q * (1 - q) / n)
+    assert abs(rate - q) <= tol, (rate, q, tol)
+    # every corrupted word differs in exactly one bit
+    d = np.asarray(out ^ clean)
+    flipped = d[d != 0]
+    assert all(bin(int(w) & 0xFFFFFFFF).count("1") == 1 for w in flipped)
+
+
+def test_fused_deterministic_and_seed_sensitive():
+    a, b = _mk(256, 256, 256, seed=3)
+    o1 = fused_aged_matmul(a, b, None, None, 1e-3, 5, interpret=True)
+    o2 = fused_aged_matmul(a, b, None, None, 1e-3, 5, interpret=True)
+    o3 = fused_aged_matmul(a, b, None, None, 1e-3, 6, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert np.any(np.asarray(o1) != np.asarray(o3))
+
+
+def test_fused_tiles_draw_independent_streams():
+    """Identical input tiles must NOT receive identical upsets — the PRNG
+    is keyed on (seed, tile), not on data."""
+    a = jnp.ones((256, 128), jnp.int8)
+    b = jnp.ones((128, 256), jnp.int8)
+    out = fused_aged_matmul(a, b, None, None, 1e-2, 11, bm=128, bn=128,
+                            bk=128, interpret=True)
+    clean = ref.systolic_matmul_ref(a, b)
+    diff = np.asarray(out != clean)
+    tiles = [diff[i * 128:(i + 1) * 128, j * 128:(j + 1) * 128]
+             for i in range(2) for j in range(2)]
+    patterns = {t.tobytes() for t in tiles}
+    assert len(patterns) == len(tiles)      # all four flip masks distinct
+
+
+# --------------------------------------------------------------------------- #
+# the ops wrapper (padding) and aged_linear fast path
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,n", [(33, 96, 130), (7, 5, 3), (256, 300, 64)])
+def test_ops_wrapper_pads_arbitrary_shapes(m, k, n):
+    a, b = _mk(m, k, n, seed=4)
+    out = ops.fused_aged_matmul(a, b, ber=1e-3, seed=8, interpret=True)
+    assert out.shape == (m, n) and out.dtype == jnp.int32
+    # oracle on the same padded layout, then sliced — padded-region draws
+    # must not disturb the live region
+    from repro.kernels.ops import _ceil_mult, _pad_to
+    bm_, bn_, bk_ = _ceil_mult(m, 256), _ceil_mult(n, 256), _ceil_mult(k, 256)
+    exp = ref.fused_aged_matmul_ref(_pad_to(a, bm_, bk_),
+                                    _pad_to(b, bk_, bn_), None, None,
+                                    1e-3, 8, bm=bm_, bn=bn_)[:m, :n]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_aged_linear_fused_matches_shapes_and_is_deterministic():
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 33, 96), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(8), (96, 130), jnp.float32)
+    f1 = ops.aged_linear(x, w, ber=1e-3, seed=5, fused=True, interpret=True)
+    f2 = ops.aged_linear(x, w, ber=1e-3, seed=5, fused=True, interpret=True)
+    assert f1.shape == (4, 33, 130) and f1.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_aged_linear_fused_ber_zero_equals_three_pass():
+    """With no upsets the fused and three-pass routes compute the same
+    quantised matmul + dequant (same op order -> bitwise equal floats)."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(10), (64, 48), jnp.float32)
+    fused = ops.aged_linear(x, w, ber=0.0, seed=1, fused=True,
+                            interpret=True)
+    three = ops.aged_linear(x, w, ber=0.0, seed=1, fused=False,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(three))
+
+
+def test_aged_linear_fused_error_grows_with_ber():
+    x = jax.random.normal(jax.random.PRNGKey(11), (32, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(12), (128, 64), jnp.float32)
+    exact = x @ w
+    errs = [float(jnp.linalg.norm(
+        ops.aged_linear(x, w, ber=ber, seed=13, fused=True, interpret=True)
+        - exact)) for ber in (0.0, 1e-4, 1e-2)]
+    assert errs[0] <= errs[1] <= errs[2]
+    assert errs[2] > 2 * errs[0]
+
+
+# --------------------------------------------------------------------------- #
+# ServeEngine end-to-end on the fused systolic path
+# --------------------------------------------------------------------------- #
+def test_serve_engine_fused_systolic_smoke():
+    from repro.configs import get_config
+    from repro.core.runtime import AgingAwareRuntime
+    from repro.data import SyntheticLM
+    from repro.serve.engine import ServeEngine
+    from repro.train.steps import init_train_state
+
+    cfg = get_config("deepseek_7b").reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=2)
+    rt = AgingAwareRuntime(fault_tolerant=True)
+    rt.set_age(years=9.0)
+    prompts = data.batch_at(0).tokens[:2, :8]
+
+    eng = ServeEngine(cfg, params, runtime=rt, max_len=16,
+                      use_systolic_kernel=True, seed=3)
+    res = eng.generate(prompts, 2)
+    assert res.tokens.shape == (2, 2)
+    assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab).all()
+    assert res.bers["q"] > 0          # aged device admits errors
+
+    # greedy + fixed engine seed -> reproducible across fresh engines
+    res2 = ServeEngine(cfg, params, runtime=rt, max_len=16,
+                       use_systolic_kernel=True, seed=3).generate(prompts, 2)
+    np.testing.assert_array_equal(res.tokens, res2.tokens)

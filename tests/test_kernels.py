@@ -88,6 +88,27 @@ def test_inject_bitflips_flips_single_bit():
     assert all(bin(int(w) & 0xFFFFFFFF).count("1") == 1 for w in changed)
 
 
+def test_inject_bitflips_pad_region_does_not_leak():
+    """Regression: the wrapper used ``jnp.resize``, tiling real accumulator
+    words into the pad region.  Padding must be zeros and — whatever the
+    pad holds — the unpadded result may only depend on the first n words'
+    randomness (the injection is elementwise)."""
+    n = 33                                   # pads to a (256, 128) tile
+    x = jax.random.randint(jax.random.PRNGKey(20), (n,), -2**20, 2**20,
+                           jnp.int32)
+    key = jax.random.PRNGKey(21)
+    y = ops.inject_bitflips(x, 1e-2, key, interpret=True)
+
+    rows_pad = 256
+    u, pos = ops.make_flip_randoms(key, (rows_pad, 128))
+    q = jnp.asarray([1 - (1 - 1e-2) ** 32], jnp.float32)
+    for pad_value in (0, 0x7FFFFFFF, -1):    # any pad content, same result
+        xf = jnp.full((rows_pad * 128,), pad_value, jnp.int32)
+        xf = xf.at[:n].set(x).reshape(rows_pad, 128)
+        exp = ref.bitflip_words_ref(xf, u, pos, q).reshape(-1)[:n]
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(exp))
+
+
 def test_inject_bitflips_deterministic():
     x = jax.random.randint(jax.random.PRNGKey(5), (256, 64), -100, 100,
                            jnp.int32)

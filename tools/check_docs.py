@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs reference checker: fail CI on dangling intra-repo references.
+
+Guards against the EXPERIMENTS.md class of bug — a docstring or document
+citing a repo file that does not exist.  Two passes:
+
+1. **Markdown links** — every relative link target in every ``*.md`` file
+   (anchors stripped) must exist on disk, resolved against the file's
+   directory — strictly file-relative, because that is how the link
+   renders.
+2. **.md mentions** — every ``<name>.md`` token mentioned in Python
+   sources or in our own markdown must exist: bare names at the repo
+   root, ``dir/<name>.md`` paths against the repo root or the mentioning
+   file's directory.  ``SNIPPETS.md`` / ``PAPERS.md`` are exempt from
+   this pass: they quote *external* repos' files as provenance.
+
+Run:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".claude", ".pytest_cache", "__pycache__",
+             ".hypothesis", "results", "node_modules"}
+MENTION_EXEMPT = {"SNIPPETS.md", "PAPERS.md"}
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MD_MENTION = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.md\b")
+EXTERNAL = re.compile(r"^(https?|mailto|ftp):")
+
+
+def _files(suffix: str):
+    for p in sorted(ROOT.rglob(f"*{suffix}")):
+        if not SKIP_DIRS.intersection(p.relative_to(ROOT).parts):
+            yield p
+
+
+def _exists(target: str, base: Path) -> bool:
+    return (base / target).exists() or (ROOT / target).exists()
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in _files(".md"):
+        rel = md.relative_to(ROOT)
+        for m in MD_LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1).split("#", 1)[0]
+            if not target or EXTERNAL.match(m.group(1)) \
+                    or m.group(1).startswith("#"):
+                continue
+            # strictly file-relative: that is how the link renders
+            if not (md.parent / target).exists():
+                errors.append(f"{rel}: dangling link -> {m.group(1)}")
+    return errors
+
+
+def check_mentions() -> list[str]:
+    errors = []
+    for path in list(_files(".py")) + [
+            p for p in _files(".md") if p.name not in MENTION_EXEMPT]:
+        rel = path.relative_to(ROOT)
+        # external URLs ending in .md are not intra-repo references
+        text = re.sub(r"(?:https?|ftp)://\S+", "",
+                      path.read_text(encoding="utf-8"))
+        for m in MD_MENTION.finditer(text):
+            token = m.group(0).removeprefix("./")
+            if not _exists(token, path.parent):
+                errors.append(f"{rel}: mentions missing file {token}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_mentions()
+    if errors:
+        print(f"check_docs: {len(errors)} dangling reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_md = len(list(_files(".md")))
+    n_py = len(list(_files(".py")))
+    print(f"check_docs: OK ({n_md} markdown files, {n_py} python files, "
+          "no dangling references)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
