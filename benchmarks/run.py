@@ -8,8 +8,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("table1", "table2", "fig5", "scenarios", "kernels", "fig1b",
-            "roofline")
+SECTIONS = ("table1", "table2", "fig5", "scenarios", "kernels", "serve",
+            "fig1b", "roofline")
 
 
 def main():
@@ -35,6 +35,9 @@ def main():
     if "kernels" in want:
         from . import kernel_bench
         runners["kernels"] = kernel_bench.run
+    if "serve" in want:
+        from . import serve_bench
+        runners["serve"] = serve_bench.run
     if "fig1b" in want:
         from . import fig1b_ber
         runners["fig1b"] = fig1b_ber.run

@@ -1,0 +1,199 @@
+"""Benchmark: serving dispatch granularity — eager loop vs scanned vs fleet.
+
+Measures the serving stack on a reduced decoder-only config:
+
+* **TTFT** (time-to-first-token): one prefill + first sample, warm.
+* **steady-state decode tokens/sec**: two warm whole-generation calls at
+  different ``n_steps`` isolate the marginal decode rate
+  ``B * (n_hi - n_lo) / (t_hi - t_lo)`` — prefill and fixed dispatch
+  overheads cancel.  The eager path pays one device dispatch plus a host
+  sync (``np.asarray(tok)``) per token; the scanned path is ONE dispatch
+  per generation (prefill + ``lax.scan`` decode + in-graph sampling).
+* **fleet-vmapped**: a heterogeneous-age ``FleetRuntime`` served by
+  :class:`~repro.serve.engine.FleetServeEngine` in one dispatch vs the
+  same lanes dispatched sequentially per device (faulted graphs, fused
+  kernel in interpret mode — relative comparison only, see
+  EXPERIMENTS.md §Serving for the methodology caveat).
+
+Structural guards (independent of wall-clock):
+
+* the scanned generation's jaxpr contains the decode ``lax.scan`` and NO
+  host callbacks — there is nothing to sync per token;
+* a repeated ``generate()`` after advancing the device age performs zero
+  new traces (``serve.steps.TRACE_COUNTS``) — the compile-cache claim.
+
+``--quick`` is the CI variant.  Results are recorded to
+``BENCH_serve.json`` at the repo root (the checked-in copy is from a full
+run in the CPU container).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.fleet import FleetRuntime
+from repro.data import SyntheticLM
+from repro.serve import steps as serve_steps
+from repro.serve.engine import FleetServeEngine, ServeEngine
+from repro.train.steps import init_train_state
+
+from .common import check, table
+
+ARCH = "deepseek_7b"
+
+
+def _timed(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _setup(batch: int, prompt_len: int):
+    cfg = get_config(ARCH).reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=prompt_len,
+                      global_batch=batch)
+    return cfg, params, data.batch_at(0).tokens
+
+
+def bench_dispatch(quick: bool):
+    """Eager vs scanned on the clean graph (kernel interpret overhead would
+    otherwise swamp the dispatch-granularity signal being measured)."""
+    B, S = (2, 8) if quick else (4, 16)
+    n_lo, n_hi = (4, 12) if quick else (8, 40)
+    reps = 2 if quick else 3
+    cfg, params, prompts = _setup(B, S)
+    max_len = S + n_hi + 1
+    eng = ServeEngine(cfg, params, max_len=max_len, seed=0)
+
+    rows, res = [], {}
+    for name, kw in (("eager", {"scan": False}), ("scanned", {})):
+        t0 = time.perf_counter()
+        eng.generate(prompts, n_hi, **kw)              # compile
+        compile_s = time.perf_counter() - t0
+        eng.generate(prompts, 1, **kw)
+        ttft = _timed(lambda: eng.generate(prompts, 1, **kw), reps)
+        eng.generate(prompts, n_lo, **kw)              # warm the lo bucket
+        t_lo = _timed(lambda: eng.generate(prompts, n_lo, **kw), reps)
+        t_hi = _timed(lambda: eng.generate(prompts, n_hi, **kw), reps)
+        tok_s = B * (n_hi - n_lo) / max(t_hi - t_lo, 1e-9)
+        res[name] = {"compile_s": compile_s, "ttft_s": ttft,
+                     "decode_tok_s": tok_s}
+        rows.append([name, f"{compile_s:.2f}s", f"{ttft * 1e3:.1f}ms",
+                     f"{t_lo * 1e3:.0f}ms", f"{t_hi * 1e3:.0f}ms",
+                     f"{tok_s:.0f}"])
+    res["speedup"] = res["scanned"]["decode_tok_s"] \
+        / max(res["eager"]["decode_tok_s"], 1e-9)
+    txt = table(f"Serving dispatch granularity (clean graph, B={B}, "
+                f"decode {n_lo}->{n_hi} steps)",
+                ["path", "compile", "TTFT", f"t({n_lo})", f"t({n_hi})",
+                 "decode tok/s"], rows)
+    txt += "\n" + check(
+        "scanned strictly faster than eager in steady-state decode",
+        res["speedup"] > 1.0, f"{res['speedup']:.2f}x")
+    return txt, res
+
+
+def bench_fleet(quick: bool):
+    """One vmapped dispatch for N aged lanes vs N sequential dispatches."""
+    N = 2 if quick else 4
+    B, S = 2, 8
+    n_steps = 3 if quick else 8
+    reps = 2
+    cfg, params, prompts = _setup(B, S)
+    max_len = S + n_steps + 1
+    fleet = FleetRuntime(n_devices=N)
+    for i in range(N):
+        fleet.set_age(years=9.0 * (i + 1) / N, device=i)
+    lane_prompts = np.stack([prompts] * N)
+
+    fe = FleetServeEngine(cfg, params, fleet, max_len=max_len, seed=0,
+                          use_systolic_kernel=True)
+    fe.generate(lane_prompts, n_steps)                  # compile
+    t_fleet = _timed(lambda: fe.generate(lane_prompts, n_steps), reps)
+
+    lanes = [ServeEngine(cfg, params, runtime=fleet, device=i,
+                         max_len=max_len, seed=0, use_systolic_kernel=True)
+             for i in range(N)]
+
+    def sequential():
+        for eng in lanes:
+            eng.generate(prompts, n_steps)
+    sequential()                                        # compile
+    t_seq = _timed(sequential, reps)
+
+    total = N * B * n_steps
+    rows = [["per-lane sequential", f"{t_seq * 1e3:.0f}ms",
+             f"{total / t_seq:.0f}"],
+            ["fleet-vmapped (1 dispatch)", f"{t_fleet * 1e3:.0f}ms",
+             f"{total / t_fleet:.0f}"]]
+    txt = table(f"Fleet serving: {N} aged lanes x B={B} x {n_steps} steps "
+                "(faulted fused graph, interpret mode)",
+                ["path", "wall", "total tok/s"], rows)
+    return txt, {"n_devices": N, "fleet_tok_s": total / t_fleet,
+                 "sequential_tok_s": total / t_seq}
+
+
+def structural_checks(quick: bool):
+    cfg, params, prompts = _setup(2, 8)
+    gen = serve_steps.make_generate_fn(cfg, 16, 4)
+    jaxpr = jax.make_jaxpr(gen)(
+        params, jnp.asarray(prompts[:, :8], jnp.int32), None,
+        jax.random.PRNGKey(0), jnp.float32(0.0))
+    prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
+    has_scan = "scan" in prims
+    no_callbacks = not any("callback" in p for p in prims)
+
+    rt = FleetRuntime(n_devices=1)
+    rt.set_age(years=5.0)
+    eng = ServeEngine(cfg, params, runtime=rt, max_len=16, seed=0,
+                      use_systolic_kernel=True)
+    eng.generate(prompts[:, :8], 4)
+    before = dict(serve_steps.TRACE_COUNTS)
+    rt.set_age(years=9.5)
+    eng.generate(prompts[:, :8], 4)
+    zero_retrace = dict(serve_steps.TRACE_COUNTS) == before
+
+    txt = check("scanned generation lowers to ONE dispatch with a decode "
+                "lax.scan (no per-token host sync primitives)",
+                has_scan and no_callbacks)
+    txt += "\n" + check("repeated generate() on an advanced-age runtime "
+                        "triggers zero recompilation", zero_retrace)
+    return txt, {"decode_is_scan": has_scan and no_callbacks,
+                 "zero_retrace_on_aging": zero_retrace}
+
+
+def run(quick: bool = False) -> str:
+    txt1, disp = bench_dispatch(quick)
+    txt2, fleet = bench_fleet(quick)
+    txt3, struct = structural_checks(quick)
+    out = "\n".join([txt1, txt2, txt3])
+
+    record = {"arch": ARCH, "mode": "quick" if quick else "full",
+              "backend": jax.default_backend(),
+              "dispatch": disp, "fleet": fleet, "structural": struct}
+    path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    out += f"\n[recorded] {path.name}"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(out)
+    if "[FAIL]" in out:
+        raise SystemExit(1)

@@ -212,6 +212,14 @@ class FleetRuntime:
         ber = self.snapshot().ber[device]
         return {op: float(ber[i]) for i, op in enumerate(self.operators)}
 
+    def op_ber_array(self) -> np.ndarray:
+        """(N, O) BER matrix, columns ordered as ``self.operators``.
+
+        The array-native accessor the fleet serving engine consumes: one
+        snapshot hands every lane its per-operator BER vector without N x O
+        scalar ``DeviceView`` round-trips."""
+        return self.snapshot().ber
+
     def total_power(self, device: int = 0) -> float:
         return float(self.snapshot().power_w[device].sum())
 

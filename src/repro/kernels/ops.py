@@ -132,6 +132,23 @@ def seed_from_key(key: jax.Array) -> jax.Array:
     return jax.random.bits(key, (), jnp.uint32).astype(jnp.int32)
 
 
+def fold_seed(seed: jax.Array, *indices) -> jax.Array:
+    """Mix indices into an int32 seed — the in-trace stream derivation.
+
+    Uses the fused kernel's own fmix32 stream mix (``stream_constant``), so
+    nearby (seed, index) pairs never alias, and each fold is ~5 integer ops
+    on a scalar: cheap enough to sit inside a ``lax.scan`` decode body once
+    per operator per step.  This is how per-(call, operator, layer, step)
+    upset streams are derived during scanned generation without threading
+    threefry keys through the scan carry.
+    """
+    from .fused_aged_matmul import stream_constant
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    for idx in indices:
+        s = stream_constant(s, jnp.asarray(idx).astype(jnp.uint32))
+    return s.astype(jnp.int32)
+
+
 def quantize_int8(x: jax.Array, axis: int = -1):
     """Symmetric per-row absmax int8 quantisation; returns (q, scale)."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)

@@ -4,6 +4,13 @@ Runs the aging-aware engine end-to-end on a reduced config: initialises
 params, builds a :class:`repro.core.fleet.FleetRuntime` (``--n-devices``
 simulated accelerators of possibly different age), and generates batched
 tokens under the per-operator BERs the policy admits at each device's age.
+
+With ``--n-devices > 1`` the whole fleet serves in ONE dispatch: the
+prompt batch is sharded across lanes and
+:class:`~repro.serve.engine.FleetServeEngine` vmaps the compiled
+prefill + scanned-decode generation over every device's BER vector.
+``--device`` narrows to a single-lane :class:`ServeEngine`; ``--eager``
+selects the per-token oracle loop (bit-exact, one dispatch per token).
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.fleet import FleetRuntime
 from repro.data import SyntheticLM
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import FleetServeEngine, ServeEngine
 from repro.train.steps import init_train_state
 
 
@@ -26,19 +33,28 @@ def main(argv=None):
     ap.add_argument("--n-devices", type=int, default=1,
                     help="fleet size; device i serves at age-years * "
                          "(i+1)/n (a staggered-deployment fleet)")
-    ap.add_argument("--device", type=int, default=0,
-                    help="which fleet device the engine serves from")
+    ap.add_argument("--device", type=int, default=None,
+                    help="serve ONE fleet device instead of the whole "
+                         "fleet in one dispatch")
     ap.add_argument("--budget", type=float, default=0.5,
                     help="accuracy budget [%% loss] of the policy")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="prompts per device")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples softmax(logits/T)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="restrict sampling to the k highest logits")
     ap.add_argument("--baseline-avs", action="store_true",
                     help="resilience-agnostic policy (raise V on every "
                          "violation) instead of fault-tolerant")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run weight matmuls through the int8 systolic "
                          "Pallas kernel (interpret mode on CPU: slow)")
+    ap.add_argument("--eager", action="store_true",
+                    help="per-token oracle loop instead of the scanned "
+                         "single-dispatch path (single-device only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -50,10 +66,12 @@ def main(argv=None):
     for i in range(args.n_devices):
         fleet.set_age(years=args.age_years * (i + 1) / args.n_devices,
                       device=i)
-    engine = ServeEngine(cfg, params, runtime=fleet, device=args.device,
-                         max_len=args.prompt_len + args.gen_len + 1,
-                         use_systolic_kernel=args.use_kernel)
 
+    fleet_mode = args.n_devices > 1 and args.device is None
+    if args.eager and fleet_mode:
+        ap.error("--eager is single-device only: pass --device <i> to "
+                 "pick a lane (the fleet path has no per-token loop)")
+    max_len = args.prompt_len + args.gen_len + 1
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len,
                        global_batch=args.batch)
     prompts = data.batch_at(0).tokens
@@ -65,19 +83,47 @@ def main(argv=None):
         extra["frames"] = np.zeros(
             (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
 
-    res = engine.generate(prompts, args.gen_len, **extra)
     pol = "baseline" if args.baseline_avs else "fault-tolerant"
-    print(f"[serve] arch={cfg.name} fleet={args.n_devices} dev={args.device} "
-          f"age={res.age_years:.1f}y policy={pol} budget={args.budget}%")
+    if fleet_mode:
+        engine = FleetServeEngine(cfg, params, fleet, max_len=max_len,
+                                  use_systolic_kernel=args.use_kernel)
+        tile = lambda x: np.broadcast_to(
+            x, (args.n_devices,) + x.shape).copy()
+        res = engine.generate(tile(prompts), args.gen_len,
+                              temperature=args.temperature,
+                              top_k=args.top_k,
+                              **{k: tile(v) for k, v in extra.items()})
+        ages = ", ".join(f"{a:.1f}y" for a in res.ages_years)
+        pw = ", ".join(f"{p:.2f}W" for p in res.power_w)
+        print(f"[serve] arch={cfg.name} fleet={args.n_devices} "
+              f"policy={pol} budget={args.budget}% — ONE dispatch for the "
+              f"whole fleet")
+        print(f"[serve] fleet ages: [{ages}]  power: [{pw}] "
+              f"(total {res.power_w.sum():.2f} W)")
+        q = res.operators.index("q")
+        bq = ", ".join(f"{b:.1e}" for b in res.bers[:, q])
+        print(f"[serve] per-lane BER(q): [{bq}]")
+        print(f"[serve] generated {res.tokens.shape} tokens "
+              "(lanes x batch x steps); lane rows: ")
+        for i in range(args.n_devices):
+            print(f"    dev{i} ({res.ages_years[i]:.1f}y): "
+                  f"{res.tokens[i, 0][:12].tolist()}")
+        return res
+
+    engine = ServeEngine(cfg, params, runtime=fleet,
+                         device=args.device or 0, max_len=max_len,
+                         use_systolic_kernel=args.use_kernel)
+    res = engine.generate(prompts, args.gen_len,
+                          temperature=args.temperature, top_k=args.top_k,
+                          scan=not args.eager, **extra)
+    print(f"[serve] arch={cfg.name} fleet={args.n_devices} "
+          f"dev={args.device or 0} age={res.age_years:.1f}y policy={pol} "
+          f"budget={args.budget}% path="
+          f"{'eager-oracle' if args.eager else 'scanned'}")
     print(f"[serve] per-op BER: " + ", ".join(
         f"{k}={v:.1e}" for k, v in sorted(res.bers.items())))
     print(f"[serve] est. array power: {res.power_w:.2f} W "
           f"(x{len(res.bers)} domains)")
-    if args.n_devices > 1:
-        ages = ", ".join(f"{a:.1f}y" for a in fleet.ages_years)
-        pw = ", ".join(f"{p:.2f}W" for p in fleet.fleet_power())
-        print(f"[serve] fleet ages: [{ages}]  power: [{pw}] "
-              f"(total {fleet.fleet_power().sum():.2f} W)")
     print(f"[serve] generated {res.tokens.shape} tokens; "
           f"first row: {res.tokens[0][:12].tolist()}")
     return res

@@ -74,10 +74,27 @@ def _self_attn(h, ap, cfg, *, causal, fi=None, salt=0, cache=None,
     new_cache = None
     if cache is not None and q.shape[1] == 1:
         idx = cache_len - 1
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 idx, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 idx, 1)
         out = attn_lib.decode_attention(q, kc, vc, cache_len, fi=fi,
                                         salt=salt)
+        new_cache = {"k": kc, "v": vc}
+    elif cache is not None:
+        # prefill-with-cache: run full attention AND stash the prompt's
+        # K/V in slots [0, S) so subsequent decode steps attend over the
+        # prompt (learned positions are applied pre-projection, so raw
+        # K/V slots are position-correct)
+        S = k.shape[1]
+        pad = cache["k"].shape[1] - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0),
+                         (0, 0))).astype(cache["k"].dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0),
+                         (0, 0))).astype(cache["v"].dtype)
+        out = attn_lib.attention(q, k, v, causal=causal, fi=fi, salt=salt)
         new_cache = {"k": kc, "v": vc}
     else:
         out = attn_lib.attention(q, k, v, causal=causal, fi=fi, salt=salt)

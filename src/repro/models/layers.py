@@ -24,28 +24,65 @@ class FaultConfig:
     """Per-operator error-injection config for serving-time evaluation.
 
     Randomness enters the weight matmuls as *seeds*, not materialised
-    random arrays: :meth:`seed_for` hashes (base key, operator, salt) down
-    to an int32 scalar that the fused kernel's in-core PRNG expands
+    random arrays: :meth:`seed_for` hashes (base key, operator, salt, step)
+    down to an int32 scalar that the fused kernel's in-core PRNG expands
     in-register.  ``fused=False`` routes through the legacy three-pass
     injection (kept as the oracle path); the batched qkt/sv activation
     matmuls always use it (:func:`op_batched_matmul` has no 2-D tiling to
     fuse into).
+
+    The config is a registered pytree: the BERs, key, per-op seed bases and
+    ``step`` are *leaves*, so it enters jitted serve steps as a traced
+    argument — advancing device age (new BER values) or the decode position
+    (new ``step``) re-jits nothing.  :meth:`for_step` folds a scan index
+    into every stream, giving each generated token its own deterministic
+    upsets per (call, operator, step); inside ``lax.scan`` the fold is pure
+    in-trace integer mixing (:func:`repro.kernels.ops.fold_seed` on the
+    fused path), with no materialised randoms and no per-step retrace.
     """
     bers: Dict[str, jax.Array]          # op name -> scalar BER
     key: jax.Array                      # base PRNG key
+    seeds: Optional[Dict[str, jax.Array]] = None  # op -> int32 stream base
+    step: jax.Array | int = 0           # decode-step index (folded in-trace)
     use_systolic_kernel: bool = True    # int8 Pallas path for weight matmuls
     fused: bool = True                  # single-pass in-kernel injection
 
     def ber_for(self, op: str):
         return self.bers.get(op, jnp.float32(0.0))
 
+    def for_step(self, step) -> "FaultConfig":
+        """This config at decode step ``step`` (traced-safe, zero retrace)."""
+        return dataclasses.replace(self, step=step)
+
+    def with_seeds(self) -> "FaultConfig":
+        """Precompute the per-operator int32 stream bases.
+
+        Call *outside* the decode scan (the serve engine does, once per
+        generate call): ``seed_for`` then derives the per-(salt, step)
+        stream with two integer mixes instead of a threefry chain, keeping
+        the scanned decode body free of per-token key hashing.
+        """
+        seeds = {op: kops.seed_from_key(jax.random.fold_in(
+            self.key, _op_salt(op))) for op in self.bers}
+        return dataclasses.replace(self, seeds=seeds)
+
     def key_for(self, op: str, salt) -> jax.Array:
         k = jax.random.fold_in(self.key, _op_salt(op))
-        return jax.random.fold_in(k, salt)
+        k = jax.random.fold_in(k, salt)
+        return jax.random.fold_in(k, self.step)
 
     def seed_for(self, op: str, salt) -> jax.Array:
         """int32 seed for the fused kernel's per-tile PRNG streams."""
-        return kops.seed_from_key(self.key_for(op, salt))
+        base = (self.seeds or {}).get(op)
+        if base is None:      # no precomputed base: hash the key path down
+            base = kops.seed_from_key(jax.random.fold_in(
+                self.key, _op_salt(op)))
+        return kops.fold_seed(base, salt, self.step)
+
+
+jax.tree_util.register_dataclass(
+    FaultConfig, data_fields=("bers", "key", "seeds", "step"),
+    meta_fields=("use_systolic_kernel", "fused"))
 
 
 _OP_IDS = {op: i for i, op in enumerate(

@@ -1,5 +1,8 @@
-"""Serving layer: prefill/decode steps and the aging-aware engine."""
-from .steps import make_decode_step, make_prefill_step
-from .engine import ServeEngine
+"""Serving layer: step/generation builders and the aging-aware engines."""
+from .steps import (make_decode_fn, make_decode_step, make_generate_fn,
+                    make_prefill_fn, make_prefill_step, sample_token)
+from .engine import FleetServeEngine, ServeEngine
 
-__all__ = ["make_decode_step", "make_prefill_step", "ServeEngine"]
+__all__ = ["make_decode_fn", "make_decode_step", "make_generate_fn",
+           "make_prefill_fn", "make_prefill_step", "sample_token",
+           "FleetServeEngine", "ServeEngine"]

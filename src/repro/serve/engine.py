@@ -7,17 +7,34 @@ per operator class (the paper's Table II rows).  Before each
 generation call it snapshots the runtime's current per-operator BERs into a
 :class:`FaultConfig`, so every matmul executes at exactly the error rate the
 fault-tolerant AVS policy admits at the device's current age.  Advancing the
-simulated age between calls re-jits nothing: the BERs enter as traced
-scalars.
+simulated age between calls re-jits nothing: ``FaultConfig`` is a pytree,
+the BERs enter as traced leaves of a cached compiled function (see
+``tests/test_serve_scanned.py`` for the zero-retrace regression guards).
 
-Serving model: static-batch generate (prefill the prompt batch, then decode
-step-by-step with an in-place KV cache).  Continuous batching slots are
-deliberately out of scope — the paper's contribution is below the batching
-policy layer.
+Serving model: static-batch generate.  The default path compiles prefill +
+the whole decode loop + sampling into ONE dispatch
+(:func:`repro.serve.steps.make_generate_fn` — a ``lax.scan`` decode with
+in-graph sampling and in-trace per-step fault streams; no per-token host
+sync).  The legacy per-token Python loop survives as the oracle path
+(``scan=False``) and is bit-exact against the scanned path.  Compiled
+functions are cached per (config, n_steps/top_k bucket, fault flavour,
+shapes) at module level, shared across engine instances.
+
+:class:`FleetServeEngine` vmaps the same generation function over the N
+devices of a :class:`~repro.core.fleet.FleetRuntime`: each lane receives
+its own per-operator BER vector straight from the fleet snapshot (the
+array-native ``op_ber_array`` accessor — no per-device ``DeviceView``
+round-trips), so a heterogeneous-age fleet serves a sharded prompt batch
+in a single dispatch.
+
+Continuous batching slots are deliberately out of scope — the paper's
+contribution is below the batching policy layer — but the whole-generation
+function is the unit any future continuous-batching scheduler would queue.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
 import jax
@@ -38,6 +55,54 @@ class GenerateResult:
     power_w: float
 
 
+@dataclasses.dataclass
+class FleetGenerateResult:
+    tokens: np.ndarray           # (N, B, steps) generated ids per lane
+    bers: np.ndarray             # (N, O) per-operator BER served per lane
+    operators: tuple             # column order of ``bers``
+    ages_years: np.ndarray       # (N,)
+    power_w: np.ndarray          # (N,)
+
+
+# --------------------------------------------------------------------------- #
+# module-level compile caches: engines with the same config share traces
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _step_fns(cfg: ModelConfig, max_len: int):
+    """Jitted (prefill, decode) taking ``fi`` as a runtime pytree argument.
+
+    One cache entry per (config, max_len); jax's own jit cache then keys
+    on shapes and on the fault flavour (the ``fi`` treedef: clean ``None``
+    vs faulted, fused vs oracle meta flags).  The decode cache operand is
+    donated so the eager loop updates it in place where the backend
+    supports aliasing (TPU; CPU falls back to a copy).
+    """
+    prefill = jax.jit(steps.make_prefill_fn(cfg, max_len))
+    decode = jax.jit(steps.make_decode_fn(cfg), donate_argnums=(2,))
+    return prefill, decode
+
+
+@functools.lru_cache(maxsize=None)
+def _generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
+                 top_k: Optional[int]):
+    """The single-dispatch generation function, jitted."""
+    return jax.jit(steps.make_generate_fn(cfg, max_len, n_steps, top_k))
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
+                       top_k: Optional[int]):
+    """vmap of the generation function over fleet lanes.
+
+    params and temperature broadcast; prompts, the FaultConfig leaves
+    (per-lane BER vectors, keys, steps) and any extras map over axis 0.
+    """
+    gen = steps.make_generate_fn(cfg, max_len, n_steps, top_k)
+    n_extras = 1 if (cfg.n_encoder_layers or cfg.prefix_tokens) else 0
+    in_axes = (None, 0, 0, 0, None) + (0,) * n_extras
+    return jax.jit(jax.vmap(gen, in_axes=in_axes))
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  runtime=None, device: int = 0,
@@ -50,9 +115,9 @@ class ServeEngine:
         With ``use_systolic_kernel=True`` every weight matmul runs on the
         Pallas int8 path; ``use_fused_kernel`` (default) selects the
         single-pass kernel that draws upsets with its in-core PRNG from a
-        per-(call, operator) seed — the engine hands the graph seeds, never
-        materialised random tensors.  Set it False to route through the
-        legacy three-pass injection (the oracle path)."""
+        per-(call, operator, step) seed — the engine hands the graph seeds,
+        never materialised random tensors.  Set it False to route through
+        the legacy three-pass injection (the oracle path)."""
         self.cfg = cfg
         self.params = params
         if isinstance(runtime, FleetRuntime):
@@ -62,8 +127,6 @@ class ServeEngine:
         self.use_kernel = use_systolic_kernel
         self.use_fused = use_fused_kernel
         self._key = jax.random.PRNGKey(seed)
-        self._prefill = None
-        self._decode = None
 
     # ------------------------------------------------------------------ #
     def _fault_config(self) -> Optional[FaultConfig]:
@@ -72,68 +135,96 @@ class ServeEngine:
         self._key, sub = jax.random.split(self._key)
         bers = {op: jnp.float32(ber)
                 for op, ber in self.runtime.op_bers().items()}
-        return FaultConfig(bers=bers, key=sub,
+        return FaultConfig(bers=bers, key=sub, step=jnp.int32(0),
                            use_systolic_kernel=self.use_kernel,
                            fused=self.use_fused)
 
-    def _build(self, fi: Optional[FaultConfig]):
+    def _extras(self, prefix_embeds, frames):
         cfg = self.cfg
-        # faulted graphs close over `fi` arrays -> pass them as args via
-        # closure-conversion: jit once per (faulted?) flavour
-        pre = steps.make_prefill_step(cfg, self.max_len, fi)
-        dec = steps.make_decode_step(cfg, fi)
-        return jax.jit(pre), jax.jit(dec)
+        if cfg.n_encoder_layers:
+            assert frames is not None, "enc-dec family needs frames="
+            return (jnp.asarray(frames),)
+        if cfg.prefix_tokens:
+            assert prefix_embeds is not None, "prefix family needs " \
+                                              "prefix_embeds="
+            return (jnp.asarray(prefix_embeds),)
+        return ()
+
+    @staticmethod
+    def _temperature(greedy, temperature):
+        """Resolve the legacy ``greedy`` flag against ``temperature``."""
+        if temperature is None:
+            temperature = 0.0 if greedy else 1.0
+        return jnp.float32(temperature)
 
     # ------------------------------------------------------------------ #
     def generate(self, prompts: np.ndarray, n_steps: int, *,
-                 prefix_embeds=None, frames=None,
-                 greedy: bool = True) -> GenerateResult:
-        """prompts: (B, S) int32.  Returns ``n_steps`` generated tokens."""
+                 prefix_embeds=None, frames=None, greedy: bool = True,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None,
+                 scan: bool = True) -> GenerateResult:
+        """prompts: (B, S) int32.  Returns ``n_steps`` generated tokens.
+
+        ``temperature=0`` (or the legacy ``greedy=True``) is exact argmax;
+        positive temperature samples ``softmax(logits / T)`` restricted to
+        the ``top_k`` highest logits when given.  Both resolve *in-graph*:
+        changing them between calls re-jits nothing (``top_k`` is a static
+        bucket).  ``scan=False`` runs the per-token eager loop — the
+        oracle path, bit-exact with the default scanned path.
+        """
         cfg = self.cfg
         fi = self._fault_config()
-        prefill, decode = self._build(fi)
-
-        B, S = prompts.shape
+        self._key, call_key = jax.random.split(self._key)
+        temp = self._temperature(greedy, temperature)
         prompts = jnp.asarray(prompts, jnp.int32)
-        extra_kv = None
-        if cfg.n_encoder_layers:
-            assert frames is not None
-            logits, cache, extra_kv = prefill(self.params, prompts, frames)
-        elif cfg.prefix_tokens:
-            assert prefix_embeds is not None
-            logits, cache = prefill(self.params, prompts, prefix_embeds)
-        else:
-            logits, cache = prefill(self.params, prompts)
+        extras = self._extras(prefix_embeds, frames)
 
-        out = []
-        cache_len = S + cfg.prefix_tokens
-        tok = self._pick(logits, greedy)
-        out.append(np.asarray(tok))
-        for i in range(1, n_steps):
-            cache_len += 1
-            if cfg.n_encoder_layers:
-                logits, cache = decode(self.params, tok[:, None], cache,
-                                       jnp.asarray(cache_len, jnp.int32),
-                                       extra_kv)
-            else:
-                logits, cache = decode(self.params, tok[:, None], cache,
-                                       jnp.asarray(cache_len, jnp.int32))
-            tok = self._pick(logits, greedy)
-            out.append(np.asarray(tok))
+        if scan:
+            gen = _generate_fn(cfg, self.max_len, int(n_steps), top_k)
+            tokens = np.asarray(gen(self.params, prompts, fi, call_key,
+                                    temp, *extras))
+        else:
+            tokens = self._generate_eager(prompts, int(n_steps), fi,
+                                          call_key, temp, top_k, extras)
 
         bers = (self.runtime.op_bers() if self.runtime else {})
         return GenerateResult(
-            tokens=np.stack(out, axis=1),
+            tokens=tokens,
             bers={k: float(v) for k, v in bers.items()},
             age_years=self.runtime.age_years if self.runtime else 0.0,
             power_w=self.runtime.total_power() if self.runtime else 0.0,
         )
 
-    def _pick(self, logits, greedy: bool):
-        if greedy:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits).astype(jnp.int32)
+    def _generate_eager(self, prompts, n_steps, fi, key, temp, top_k,
+                        extras) -> np.ndarray:
+        """Per-token oracle loop: one dispatch + host sync per token.
+
+        Kept for parity testing and as the reference semantics; the key /
+        fault-stream derivation mirrors the scanned path exactly, so token
+        sequences are bit-exact between the two.
+        """
+        cfg = self.cfg
+        prefill, decode = _step_fns(cfg, self.max_len)
+        out = prefill(self.params, prompts, fi, *extras)
+        logits, cache = out[0], out[1]
+        kv = out[2] if cfg.n_encoder_layers else None
+        key, sub = jax.random.split(key)
+        tok = steps.sample_token(logits, sub, temp, top_k)
+        toks = [np.asarray(tok)]
+        cache_len0 = prompts.shape[1] + cfg.prefix_tokens
+        for t in range(1, n_steps):
+            fi_t = None if fi is None else fi.for_step(jnp.int32(t))
+            cache_len = jnp.asarray(cache_len0 + t, jnp.int32)
+            if cfg.n_encoder_layers:
+                logits, cache = decode(self.params, tok[:, None], cache,
+                                       cache_len, fi_t, kv)
+            else:
+                logits, cache = decode(self.params, tok[:, None], cache,
+                                       cache_len, fi_t)
+            key, sub = jax.random.split(key)
+            tok = steps.sample_token(logits, sub, temp, top_k)
+            toks.append(np.asarray(tok))
+        return np.stack(toks, axis=1)
 
     # ------------------------------------------------------------------ #
     def score(self, tokens: np.ndarray, *, prefix_embeds=None,
@@ -157,3 +248,111 @@ class ServeEngine:
             if cfg.prefix_tokens:
                 logits = logits[:, cfg.prefix_tokens:]
         return float(softmax_xent(logits, lab))
+
+
+# --------------------------------------------------------------------------- #
+class FleetServeEngine:
+    """Serve the WHOLE fleet in one dispatch.
+
+    Where :class:`ServeEngine` serves one device of a
+    :class:`~repro.core.fleet.FleetRuntime`, this engine vmaps the
+    single-dispatch generation function over all N lanes: device ``i``
+    executes its slice of the prompt batch at its own policy-admitted
+    per-operator BERs (one row of ``fleet.op_ber_array()``).  Params are
+    broadcast, fault streams are decorrelated per lane, and the entire
+    heterogeneous-age fleet generation — prefill, decode scan, sampling,
+    upsets — is one compiled call.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, fleet: FleetRuntime, *,
+                 max_len: int = 512, use_systolic_kernel: bool = False,
+                 use_fused_kernel: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.fleet = fleet
+        self.max_len = max_len
+        self.use_kernel = use_systolic_kernel
+        self.use_fused = use_fused_kernel
+        self._key = jax.random.PRNGKey(seed)
+
+    @property
+    def n_devices(self) -> int:
+        return self.fleet.n_devices
+
+    # ------------------------------------------------------------------ #
+    def _fleet_fault_config(self, call_key) -> FaultConfig:
+        """Batched FaultConfig: every leaf carries the fleet axis (N, ...).
+
+        BER columns come straight from the fleet snapshot's (N, O) array —
+        no per-device ``DeviceView`` round-trips — and each lane gets an
+        independent fold of the call key.
+        """
+        N = self.fleet.n_devices
+        ber = self.fleet.op_ber_array()                      # (N, O)
+        bers = {op: jnp.asarray(ber[:, i], jnp.float32)
+                for i, op in enumerate(self.fleet.operators)}
+        keys = jax.random.split(call_key, N)                 # (N, key)
+        return FaultConfig(bers=bers, key=keys,
+                           step=jnp.zeros((N,), jnp.int32),
+                           use_systolic_kernel=self.use_kernel,
+                           fused=self.use_fused)
+
+    def _shard(self, x, name: str, lane_ndim: int) -> jax.Array:
+        """Per-lane input (rank ``lane_ndim``, leading N) passes through;
+        a flat batch (one rank lower) is sharded over lanes.  Dispatch is
+        by rank, not leading dim — a flat (N, S) batch with one prompt per
+        lane is sharding, not an N-lane rank-1 prompt."""
+        N = self.fleet.n_devices
+        x = jnp.asarray(x)
+        if x.ndim == lane_ndim:
+            assert x.shape[0] == N, \
+                f"{name} lane dim {x.shape[0]} != fleet size {N}"
+            return x
+        assert x.ndim == lane_ndim - 1, \
+            f"{name} must be rank {lane_ndim} (per-lane) or " \
+            f"{lane_ndim - 1} (flat batch), got rank {x.ndim}"
+        assert x.shape[0] % N == 0, \
+            f"{name} leading dim {x.shape[0]} not divisible by fleet " \
+            f"size {N}"
+        return x.reshape(N, x.shape[0] // N, *x.shape[1:])
+
+    # ------------------------------------------------------------------ #
+    def generate(self, prompts: np.ndarray, n_steps: int, *,
+                 prefix_embeds=None, frames=None,
+                 temperature: float = 0.0,
+                 top_k: Optional[int] = None) -> FleetGenerateResult:
+        """prompts: (N, B, S) per-lane, or (N*B, S) sharded across lanes.
+
+        Returns per-lane token blocks plus the (N, O) BER matrix actually
+        served.  Repeated calls after ``fleet.advance(...)`` reuse the
+        compiled function — ages enter as traced leaves.
+        """
+        cfg = self.cfg
+        self._key, call_key = jax.random.split(self._key)
+        prompts = self._shard(jnp.asarray(prompts, jnp.int32), "prompts",
+                              lane_ndim=3)
+        fi = self._fleet_fault_config(call_key)
+        keys = jax.random.split(jax.random.fold_in(call_key, 1),
+                                self.fleet.n_devices)
+        extras = ()
+        if cfg.n_encoder_layers:
+            assert frames is not None, "enc-dec family needs frames="
+            extras = (self._shard(frames, "frames", lane_ndim=4),)
+        elif cfg.prefix_tokens:
+            assert prefix_embeds is not None, "prefix family needs " \
+                                              "prefix_embeds="
+            extras = (self._shard(prefix_embeds, "prefix_embeds",
+                                  lane_ndim=4),)
+
+        gen = _fleet_generate_fn(cfg, self.max_len, int(n_steps), top_k)
+        tokens = gen(self.params, prompts, fi, keys,
+                     jnp.float32(temperature), *extras)
+
+        snap = self.fleet.snapshot()
+        return FleetGenerateResult(
+            tokens=np.asarray(tokens),
+            bers=np.asarray(snap.ber),
+            operators=self.fleet.operators,
+            ages_years=np.asarray(self.fleet.ages_years),
+            power_w=np.asarray(self.fleet.fleet_power()),
+        )

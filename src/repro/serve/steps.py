@@ -1,22 +1,42 @@
-"""Serve-step builders: prefill (full-sequence) and decode (one token).
+"""Serve-step builders: prefill, decode, and whole-generation functions.
 
-These are the functions the dry-run lowers for the ``prefill_*`` /
-``decode_*`` / ``long_*`` shape cells, and the engine jits for real serving.
+Three layers of API, all sharing the same model code paths:
+
+* :func:`make_prefill_fn` / :func:`make_decode_fn` — steps that take the
+  :class:`~repro.models.layers.FaultConfig` as a *runtime argument* (it is
+  a registered pytree: BERs/keys/seeds are traced leaves).  One jitted
+  instance serves every device age — advancing the runtime between calls
+  re-jits nothing.  These are what :class:`repro.serve.engine.ServeEngine`
+  caches and what the eager-loop oracle path dispatches per token.
+* :func:`make_generate_fn` — the serving hot path: prefill + a
+  ``lax.scan`` decode loop + in-graph sampling fused into ONE function,
+  jitted once per (config, n_steps, top_k) bucket.  A whole generation is
+  a single device dispatch: no per-token host sync, no per-token argmax
+  round-trip, per-step fault streams derived in-trace by folding the scan
+  index into the ``FaultConfig`` streams (``fi.for_step(t)``).
+* :func:`make_prefill_step` / :func:`make_decode_step` — the legacy
+  builders (``fi`` captured at build time), kept for the dry-run /
+  hillclimb lowering cells that jit them with explicit shardings.
+
 ``decode_step`` consumes/produces the KV-cache pytree whose shardings come
 from ``repro.distributed.sharding.cache_specs`` (sequence-sharded over
 "model" when KV heads cannot split — partial-softmax decode attention).
 
-Fault injection: ``fi`` (a ``repro.models.layers.FaultConfig``) threads the
-per-operator BERs from the AVS runtime into every matmul domain.  The
-config carries only scalars — BERs plus a base key hashed to per-operator
-int32 *seeds* that the fused kernel expands in-register, so the weight
+Fault injection: ``fi`` threads the per-operator BERs from the AVS runtime
+into every matmul domain.  The config carries only scalars — BERs plus
+int32 *seed* streams the fused kernel expands in-register, so the weight
 matmuls (``op_linear`` domains) lower with no output-sized random arrays.
 The activation x activation qkt/sv domains (``op_batched_matmul``) still
 route through the three-pass injection.  ``fi=None`` lowers the clean
 graph (what the roofline measures).
+
+``TRACE_COUNTS`` ticks once per *trace* of each built function (the Python
+body only runs while jax traces) — the regression tests assert repeated
+``generate()`` calls on an aged runtime add zero counts.
 """
 from __future__ import annotations
 
+import collections
 from typing import Callable, Optional
 
 import jax
@@ -27,51 +47,206 @@ from repro.models import encdec
 from repro.models import transformer as tf
 from repro.models.layers import FaultConfig
 
+# name -> number of times jax traced that step body.  jit caches traces, so
+# a steady-state serve loop must not tick these; see
+# tests/test_serve_scanned.py::test_repeated_generate_zero_retrace.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
-def make_prefill_step(cfg: ModelConfig, max_len: int,
-                      fi: Optional[FaultConfig] = None) -> Callable:
-    """(params, tokens[, prefix_embeds/frames]) -> (logits_last, cache).
+
+def _fi_step(fi: Optional[FaultConfig], step):
+    return None if fi is None else fi.for_step(step)
+
+
+# --------------------------------------------------------------------------- #
+# runtime-fi steps (the engine path)
+# --------------------------------------------------------------------------- #
+def make_prefill_fn(cfg: ModelConfig, max_len: int) -> Callable:
+    """(params, tokens, fi[, prefix_embeds/frames]) -> (logits_last, cache
+    [, kv]).
 
     The cache is allocated at ``max_len`` so subsequent decode steps reuse
-    it in place.
+    it in place.  ``fi`` is a runtime argument (pytree) — one jitted
+    instance covers every device age of a fault flavour.
     """
     if cfg.n_encoder_layers:
-        def prefill(params, tokens, frames):
-            B = tokens.shape[0]
+        def prefill(params, tokens, fi, frames):
+            TRACE_COUNTS["prefill"] += 1
+            B, S = tokens.shape
             enc = encdec.encode(params, cfg, frames, fi=fi)
             kv = encdec.cross_kv(params, cfg, enc, fi=fi)
-            cache = encdec.init_cache(cfg, B, max_len)
-            logits, _ = encdec.decode(params, cfg, tokens, kv=kv, fi=fi)
+            # cache slots must match the decoder's compute dtype (the
+            # params dtype): decoder-only prefill overwrites the whole
+            # cache so a mismatch is silently fixed there, but the enc-dec
+            # cache is written slot by slot
+            cache = encdec.init_cache(cfg, B, max_len,
+                                      dtype=getattr(params["embed"], "dtype",
+                                                    jnp.bfloat16))
+            logits, cache = encdec.decode(
+                params, cfg, tokens, kv=kv, fi=fi, cache=cache,
+                cache_len=jnp.asarray(S, jnp.int32))
             return logits[:, -1], cache, kv
         return prefill
 
-    def prefill(params, tokens, prefix_embeds=None):
+    if cfg.prefix_tokens:
+        def prefill(params, tokens, fi, prefix_embeds):
+            TRACE_COUNTS["prefill"] += 1
+            B, S = tokens.shape
+            cache = tf.init_cache(cfg, B, max_len)
+            logits, cache, _ = tf.forward_logits(
+                params, cfg, tokens, states=cache,
+                cache_len=jnp.asarray(S + cfg.prefix_tokens, jnp.int32),
+                fi=fi, prefix_embeds=prefix_embeds)
+            return logits[:, -1], cache
+        return prefill
+
+    def prefill(params, tokens, fi):
+        TRACE_COUNTS["prefill"] += 1
         B, S = tokens.shape
         cache = tf.init_cache(cfg, B, max_len)
-        kwargs = {}
-        if cfg.prefix_tokens:
-            kwargs["prefix_embeds"] = prefix_embeds
         logits, cache, _ = tf.forward_logits(
             params, cfg, tokens, states=cache,
-            cache_len=jnp.asarray(S + cfg.prefix_tokens, jnp.int32),
-            fi=fi, **kwargs)
+            cache_len=jnp.asarray(S, jnp.int32), fi=fi)
         return logits[:, -1], cache
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig,
-                     fi: Optional[FaultConfig] = None) -> Callable:
-    """(params, token (B,1), cache, cache_len) -> (logits (B,V), cache)."""
+def make_decode_fn(cfg: ModelConfig) -> Callable:
+    """(params, token (B,1), cache, cache_len, fi[, kv]) -> (logits, cache).
+
+    ``fi`` is a runtime argument; engines donate the cache operand so the
+    eager loop updates it in place on backends that support aliasing.
+    """
     if cfg.n_encoder_layers:
-        def decode(params, token, cache, cache_len, kv):
+        def decode(params, token, cache, cache_len, fi, kv):
+            TRACE_COUNTS["decode"] += 1
             logits, new_cache = encdec.decode(
                 params, cfg, token, kv=kv, fi=fi, cache=cache,
                 cache_len=cache_len, pos_offset=cache_len - 1)
             return logits[:, -1], new_cache
         return decode
 
-    def decode(params, token, cache, cache_len):
+    def decode(params, token, cache, cache_len, fi):
+        TRACE_COUNTS["decode"] += 1
         logits, new_cache = tf.decode_step(params, cfg, token, cache,
                                            cache_len, fi=fi)
         return logits[:, -1], new_cache
     return decode
+
+
+# --------------------------------------------------------------------------- #
+# in-graph sampling
+# --------------------------------------------------------------------------- #
+def sample_token(logits: jax.Array, key: jax.Array, temperature,
+                 top_k: Optional[int] = None) -> jax.Array:
+    """Greedy/temperature/top-k sampling as a pure graph op.
+
+    ``temperature`` is a traced scalar: ``temperature == 0`` selects the
+    argmax (exact greedy, not a limit), anything positive samples from
+    ``softmax(logits / temperature)``; ``top_k`` (static) masks all but the
+    k highest logits first.  Because the selection is a ``jnp.where`` and
+    not Python control flow, the same compiled generation covers greedy
+    and sampled serving without retracing.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    if top_k is not None:
+        vals = jax.lax.top_k(logits, top_k)[0]
+        logits = jnp.where(logits < vals[..., -1:], -jnp.inf, logits)
+    t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+    sampled = jax.random.categorical(key, logits / t, axis=-1)
+    pick = jnp.where(jnp.asarray(temperature, jnp.float32) > 0,
+                     sampled, greedy)
+    return pick.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# whole-generation (scanned) serving
+# --------------------------------------------------------------------------- #
+def make_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
+                     top_k: Optional[int] = None) -> Callable:
+    """Build the single-dispatch generation function.
+
+    Returns ``generate(params, prompts, fi, key, temperature[, extras])
+    -> tokens (B, n_steps)`` where ``extras`` is ``prefix_embeds`` for
+    prefix (VLM) families and ``frames`` for encoder-decoder families.
+    Prefill, a ``lax.scan`` over ``n_steps - 1`` decode steps, and
+    sampling all live in one trace:
+
+    * the KV cache never leaves the device or the trace — the scan carry
+      aliases it in place (XLA donates scan carries by construction);
+    * sampling keys thread through the carry with one ``split`` per step
+      — the same derivation the eager oracle performs, so token sequences
+      are bit-exact between the two paths;
+    * fault streams per step come from ``fi.for_step(t)`` — in-trace
+      integer folds, no materialised randoms, no per-step retrace.
+
+    Tokens generated past a ring-buffered (windowed) cache's capacity
+    follow the same ring semantics as the eager loop (both call the same
+    ``decode_step``).
+    """
+    prefill = make_prefill_fn(cfg, max_len)
+    decode = make_decode_fn(cfg)
+    has_kv = bool(cfg.n_encoder_layers)
+
+    def generate(params, prompts, fi, key, temperature, *extras):
+        TRACE_COUNTS["generate"] += 1
+        S = prompts.shape[1]
+        if fi is not None:
+            # hoist the per-op threefry stream bases out of the scan body:
+            # in-loop derivation is then pure fmix32 integer folds
+            fi = fi.with_seeds()
+        out = prefill(params, prompts, fi, *extras)
+        logits, cache = out[0], out[1]
+        kv = out[2] if has_kv else None
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, sub, temperature, top_k)
+        cache_len0 = S + cfg.prefix_tokens
+
+        def body(carry, t):
+            tok, cache, key = carry
+            cache_len = jnp.asarray(cache_len0 + t, jnp.int32)
+            fi_t = _fi_step(fi, t)
+            if has_kv:
+                logits, cache = decode(params, tok[:, None], cache,
+                                       cache_len, fi_t, kv)
+            else:
+                logits, cache = decode(params, tok[:, None], cache,
+                                       cache_len, fi_t)
+            key, sub = jax.random.split(key)
+            tok = sample_token(logits, sub, temperature, top_k)
+            return (tok, cache, key), tok
+
+        (_, _, _), toks = jax.lax.scan(
+            body, (tok, cache, key), jnp.arange(1, n_steps, dtype=jnp.int32))
+        return jnp.concatenate([tok[:, None], toks.T], axis=1) \
+            if n_steps > 1 else tok[:, None]
+    return generate
+
+
+# --------------------------------------------------------------------------- #
+# legacy builders (fi captured at build time) — dry-run / hillclimb surface
+# --------------------------------------------------------------------------- #
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      fi: Optional[FaultConfig] = None) -> Callable:
+    """(params, tokens[, prefix_embeds/frames]) -> (logits_last, cache).
+
+    ``fi`` is closed over — what the dry-run lowers for the ``prefill_*``
+    shape cells.  Engines use :func:`make_prefill_fn` instead.
+    """
+    fn = make_prefill_fn(cfg, max_len)
+    if cfg.n_encoder_layers:
+        return lambda params, tokens, frames: fn(params, tokens, fi, frames)
+    if cfg.prefix_tokens:
+        return lambda params, tokens, prefix_embeds=None: \
+            fn(params, tokens, fi, prefix_embeds)
+    return lambda params, tokens: fn(params, tokens, fi)
+
+
+def make_decode_step(cfg: ModelConfig,
+                     fi: Optional[FaultConfig] = None) -> Callable:
+    """(params, token (B,1), cache, cache_len[, kv]) -> (logits, cache)."""
+    fn = make_decode_fn(cfg)
+    if cfg.n_encoder_layers:
+        return lambda params, token, cache, cache_len, kv: \
+            fn(params, token, cache, cache_len, fi, kv)
+    return lambda params, token, cache, cache_len: \
+        fn(params, token, cache, cache_len, fi)
