@@ -9,7 +9,7 @@ import sys
 import time
 
 SECTIONS = ("table1", "table2", "fig5", "scenarios", "kernels", "serve",
-            "fig1b", "roofline")
+            "resilience", "fig1b", "roofline")
 
 
 def main():
@@ -38,6 +38,9 @@ def main():
     if "serve" in want:
         from . import serve_bench
         runners["serve"] = serve_bench.run
+    if "resilience" in want:
+        from . import resilience_bench
+        runners["resilience"] = resilience_bench.run
     if "fig1b" in want:
         from . import fig1b_ber
         runners["fig1b"] = fig1b_ber.run

@@ -1,0 +1,13 @@
+"""Measured-characterisation layer: fault-injection sweeps over the zoo.
+
+:mod:`repro.calibrate.resilience_sweep` measures the per-operator
+BER -> accuracy-loss curves the fault-tolerant policy consumes, as batched
+single-dispatch fault-injection grids (DESIGN.md §6).  The physics-side
+one-shot calibration lives in :mod:`repro.core.calibrate`; this package is
+the *model*-side counterpart.
+"""
+from .resilience_sweep import (SweepResult, empirical_resilience, fit_sweep,
+                               grid_fault_config, run_sweep, write_artifact)
+
+__all__ = ["SweepResult", "empirical_resilience", "fit_sweep",
+           "grid_fault_config", "run_sweep", "write_artifact"]

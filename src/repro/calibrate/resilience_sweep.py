@@ -1,0 +1,317 @@
+"""Batched fault-injection resilience characterisation (the measured path).
+
+The fault-tolerant policy's headline trick — deferring voltage boosts by
+exploiting per-operator DNN resilience — is only as good as its
+BER -> accuracy-loss curves.  ``core/resilience.py`` ships the published
+REALM-style defaults; this module MEASURES the curves on a model from the
+zoo, with the same fault machinery the serving engine uses in production
+(:class:`repro.models.layers.FaultConfig` through every ``op_linear`` /
+``op_batched_matmul`` domain, optionally on the fused aged-matmul kernel).
+
+Vectorisation mirrors :class:`repro.serve.engine.FleetServeEngine`: where
+the fleet engine vmaps generation over N device lanes, the sweep vmaps a
+teacher-forced evaluation over L = |BER grid| x |operator domains| *fault
+lanes* — one :class:`FaultConfig` whose leaves carry the lane axis, lane
+``b * O + j`` injecting ``ber_grid[b]`` into operator ``j`` only.  The
+whole characterisation grid for a model is therefore ONE compiled dispatch
+(the lane axis runs as a ``lax.map`` over vmapped chunks — full vmap on
+TPU, lane-serial on CPU where a wide vmap is cache-bound; see
+:func:`default_chunk`), and because BER values / keys are traced pytree
+leaves, re-running with a different grid of the same length (more seeds,
+refined BERs) re-jits NOTHING.  ``TRACE_COUNTS`` ticks per trace exactly like
+``repro.serve.steps.TRACE_COUNTS`` and is regression-guarded by
+``tests/test_resilience_sweep.py`` and ``benchmarks/resilience_bench.py``.
+
+Metric: **top-1 disagreement** against the quantised-but-error-free
+reference execution (all-zero BER through the same int8 path), in percent —
+0 at vanishing BER, collapsing to ~100 (chance) at saturating BER, matching
+the ``l_max = 100`` logistic of :func:`repro.core.resilience.fit_curve`.
+Comparing against the quantised reference isolates *bit errors* from
+quantisation error.
+
+Entry points: :func:`run_sweep` (measure), :func:`fit_sweep` (fit),
+:func:`empirical_resilience` (both — the function the
+``core/resilience.py`` docstring promises), :func:`write_artifact`
+(checked-in ``resilience_calibrated.json``).  CLI:
+``python -m repro.launch.calibrate_resilience``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import json
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.resilience import (DEFAULT_LMAX, MEASURED_PATH,
+                                   ResilienceCurve, curve_to_dict, fit_curve,
+                                   load_measured, operators_for)
+from repro.models import encdec
+from repro.models import transformer as tf
+from repro.models.layers import FaultConfig
+
+# name -> number of times jax traced that evaluation body (cf.
+# serve.steps.TRACE_COUNTS).  The whole BER x operator grid is one vmapped
+# call, so a model's characterisation must tick "grid_eval" exactly once —
+# and repeat sweeps (new seeds / BER values, same grid length) not at all.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# log10-uniform BER grids.  The full grid spans the published curves'
+# dynamic range (Fig. 1b: 1e-7 .. 1e-3) plus headroom on both sides so the
+# logistic knee of *less* resilient models (tiny zoo-reduced configs) is
+# still bracketed; quick is the CI variant.
+DEFAULT_BER_GRID: Tuple[float, ...] = tuple(
+    float(b) for b in np.logspace(-7.0, -1.5, 12))
+QUICK_BER_GRID: Tuple[float, ...] = tuple(
+    float(b) for b in np.logspace(-6.0, -2.0, 5))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Measured loss surface of one model: ``loss_pct[b, j]`` is the top-1
+    disagreement [%] at ``ber_grid[b]`` injected into ``operators[j]``."""
+    model: str
+    family: str
+    operators: Tuple[str, ...]
+    ber_grid: np.ndarray           # (n_bers,)
+    loss_pct: np.ndarray           # (n_bers, n_ops), seed-averaged
+    n_seeds: int
+    metric: str = "top1_disagreement_pct"
+
+
+# --------------------------------------------------------------------------- #
+# evaluation bodies — shared forward with the serving engine's score() path
+# --------------------------------------------------------------------------- #
+def _forward_logits(params, cfg: ModelConfig, tokens, fi, extras):
+    if cfg.n_encoder_layers:
+        (frames,) = extras
+        enc = encdec.encode(params, cfg, frames, fi=fi)
+        logits, _ = encdec.decode(params, cfg, tokens, enc_out=enc, fi=fi)
+        return logits
+    pe = extras[0] if cfg.prefix_tokens else None
+    logits, _, _ = tf.forward_logits(params, cfg, tokens,
+                                     prefix_embeds=pe, fi=fi)
+    if cfg.prefix_tokens:
+        logits = logits[:, cfg.prefix_tokens:]
+    return logits
+
+
+@functools.lru_cache(maxsize=None)
+def _predict_fn(cfg: ModelConfig):
+    """Jitted (params, tokens, fi, *extras) -> top-1 predictions (B, S)."""
+    def predict(params, tokens, fi, *extras):
+        TRACE_COUNTS["predict"] += 1
+        logits = _forward_logits(params, cfg, tokens, fi, extras)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.jit(predict)
+
+
+def default_chunk() -> Optional[int]:
+    """Lanes vmapped together per in-graph step of the grid evaluation.
+
+    On TPU the whole lane axis batches into the MXU — full vmap
+    (``None``).  On CPU, XLA's executable for a wide lane-vmap is
+    memory-bound (per-matmul injection randoms scale with the lane axis
+    and blow the cache: measured 6x slower at 45 lanes than lane-serial),
+    so the default is ``1``: a ``lax.map`` over lanes — still ONE
+    dispatch, one trace, zero per-lane Python — with a lane-local working
+    set.
+    """
+    return None if jax.default_backend() == "tpu" else 1
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_eval_fn(cfg: ModelConfig, chunk: Optional[int]):
+    """The single-dispatch grid evaluation: loss per fault lane.
+
+    The lane axis (axis 0 of the :class:`FaultConfig` leaves — params,
+    tokens, the reference predictions and extras broadcast, exactly how
+    ``serve.engine._fleet_generate_fn`` maps fleet lanes) is evaluated as
+    a ``lax.map`` over chunks of ``chunk`` vmapped lanes; ``chunk=None``
+    degenerates to the pure vmap.  Either way the whole grid is one
+    compiled dispatch and the evaluation body traces ONCE
+    (``TRACE_COUNTS["grid_eval"]`` — ``lax.map``/``vmap`` both trace the
+    body a single time).
+    """
+    def lane_loss(params, tokens, ref_pred, fi, *extras):
+        TRACE_COUNTS["grid_eval"] += 1
+        logits = _forward_logits(params, cfg, tokens, fi, extras)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        agree = jnp.mean((pred == ref_pred).astype(jnp.float32))
+        return 100.0 * (1.0 - agree)
+
+    n_extras = 1 if (cfg.n_encoder_layers or cfg.prefix_tokens) else 0
+    in_axes = (None, None, None, 0) + (None,) * n_extras
+    vloss = jax.vmap(lane_loss, in_axes=in_axes)
+    if chunk is None:
+        return jax.jit(vloss)
+
+    def grid(params, tokens, ref_pred, fi, *extras):
+        n_lanes = jax.tree_util.tree_leaves(fi)[0].shape[0]
+        pad = (-n_lanes) % chunk       # any chunk works: repeat tail lanes
+        if pad:
+            fi = jax.tree.map(
+                lambda x: jnp.concatenate([x, x[-pad:]], axis=0), fi)
+        fi_c = jax.tree.map(
+            lambda x: x.reshape((-1, chunk) + x.shape[1:]), fi)
+        out = jax.lax.map(
+            lambda fc: vloss(params, tokens, ref_pred, fc, *extras), fi_c)
+        return out.reshape(-1)[:n_lanes]
+    return jax.jit(grid)
+
+
+# --------------------------------------------------------------------------- #
+# lane construction
+# --------------------------------------------------------------------------- #
+def grid_fault_config(operators: Tuple[str, ...], ber_grid, key, *,
+                      use_kernel: bool = False,
+                      fused: bool = False) -> FaultConfig:
+    """One batched :class:`FaultConfig` covering the whole (BER, operator)
+    grid: every leaf carries a leading lane axis of length
+    ``len(ber_grid) * len(operators)``; lane ``b * O + j`` injects
+    ``ber_grid[b]`` into ``operators[j]`` and zero everywhere else.
+
+    BER values and per-lane keys are traced leaves — refining the grid
+    *values* or redrawing seeds reuses the compiled evaluation.
+    """
+    n_ops = len(operators)
+    ber = jnp.asarray(np.asarray(ber_grid, np.float32))       # (n_bers,)
+    lane_ber = jnp.repeat(ber, n_ops)                         # (L,)
+    lane_op = jnp.tile(jnp.arange(n_ops, dtype=jnp.int32), ber.shape[0])
+    bers = {op: jnp.where(lane_op == j, lane_ber, jnp.float32(0.0))
+            for j, op in enumerate(operators)}
+    keys = jax.random.split(key, ber.shape[0] * n_ops)        # (L, key)
+    return FaultConfig(bers=bers, key=keys,
+                       step=jnp.zeros((ber.shape[0] * n_ops,), jnp.int32),
+                       use_systolic_kernel=use_kernel, fused=fused)
+
+
+def _reference_fault_config(operators: Tuple[str, ...], key, *,
+                            use_kernel: bool, fused: bool) -> FaultConfig:
+    """Quantised-but-error-free execution: the sweep's accuracy reference
+    runs the SAME int8 path with every BER pinned to zero (deterministic —
+    the key is never consumed at BER 0)."""
+    bers = {op: jnp.float32(0.0) for op in operators}
+    return FaultConfig(bers=bers, key=key, step=jnp.int32(0),
+                       use_systolic_kernel=use_kernel, fused=fused)
+
+
+# --------------------------------------------------------------------------- #
+# sweep + fit
+# --------------------------------------------------------------------------- #
+def run_sweep(cfg: ModelConfig, params, tokens, *,
+              ber_grid=DEFAULT_BER_GRID,
+              operators: Optional[Tuple[str, ...]] = None,
+              n_seeds: int = 2, seed: int = 0, extras: tuple = (),
+              use_kernel: bool = False, fused: bool = False,
+              chunk: Optional[int] = 0,
+              model: Optional[str] = None) -> SweepResult:
+    """Measure the (BER x operator) loss surface of one model.
+
+    Each seed repeat is ONE dispatch over all ``len(ber_grid) * O`` fault
+    lanes, evaluated teacher-forced on ``tokens`` against the quantised
+    error-free reference.  ``use_kernel=True`` routes the weight matmuls
+    through the Pallas systolic path (``fused=True`` selects the fused
+    in-kernel-PRNG injection — the serving hot path; interpret mode
+    off-TPU, so expect wall-clock overhead, not different statistics).
+    ``chunk`` sets the vmap width per in-graph step (default: backend
+    heuristic, see :func:`default_chunk`; ``None``: pure vmap).
+    """
+    operators = tuple(operators or operators_for(cfg.family))
+    tokens = jnp.asarray(tokens, jnp.int32)
+    extras = tuple(jnp.asarray(e) for e in extras)
+    key = jax.random.PRNGKey(seed)
+
+    ref_fi = _reference_fault_config(operators, key, use_kernel=use_kernel,
+                                     fused=fused)
+    ref_pred = _predict_fn(cfg)(params, tokens, ref_fi, *extras)
+
+    n_lanes = len(ber_grid) * len(operators)
+    chunk = default_chunk() if chunk == 0 else chunk
+    if chunk is not None:
+        chunk = max(1, min(int(chunk), n_lanes))
+    gfn = _grid_eval_fn(cfg, chunk)
+    per_seed = []
+    for s in range(n_seeds):
+        fi = grid_fault_config(operators, ber_grid,
+                               jax.random.fold_in(key, s),
+                               use_kernel=use_kernel, fused=fused)
+        per_seed.append(np.asarray(gfn(params, tokens, ref_pred, fi,
+                                       *extras)))
+    loss = np.mean(per_seed, axis=0).reshape(len(ber_grid), len(operators))
+    return SweepResult(model=model or cfg.name, family=cfg.family,
+                       operators=operators,
+                       ber_grid=np.asarray(ber_grid, np.float64),
+                       loss_pct=loss.astype(np.float64), n_seeds=n_seeds)
+
+
+def fit_sweep(result: SweepResult,
+              l_max: float = DEFAULT_LMAX) -> Dict[str, ResilienceCurve]:
+    """Logistic fit per operator column of a measured loss surface."""
+    return {op: fit_curve(result.ber_grid, result.loss_pct[:, j],
+                          l_max=l_max)
+            for j, op in enumerate(result.operators)}
+
+
+def empirical_resilience(cfg: ModelConfig, params, tokens, *,
+                         ber_grid=DEFAULT_BER_GRID, n_seeds: int = 2,
+                         seed: int = 0, extras: tuple = (),
+                         use_kernel: bool = False, fused: bool = False,
+                         model: Optional[str] = None,
+                         ) -> Tuple[Dict[str, ResilienceCurve], SweepResult]:
+    """Measure AND fit: the in-repo recalibration entry point.
+
+    Returns ``(curves, sweep_result)`` — feed ``curves`` to
+    :class:`repro.core.policy.MeasuredResiliencePolicy` (or persist them
+    with :func:`write_artifact` and use ``policy="measured"``).
+    """
+    res = run_sweep(cfg, params, tokens, ber_grid=ber_grid, n_seeds=n_seeds,
+                    seed=seed, extras=extras, use_kernel=use_kernel,
+                    fused=fused, model=model)
+    return fit_sweep(res), res
+
+
+# --------------------------------------------------------------------------- #
+# artifact
+# --------------------------------------------------------------------------- #
+def write_artifact(entries: Dict[str, Tuple[SweepResult,
+                                            Dict[str, ResilienceCurve]]],
+                   meta: Dict, path: str = MEASURED_PATH) -> Dict:
+    """Merge measured models into ``resilience_calibrated.json``.
+
+    ``entries`` maps arch id -> (sweep result, fitted curves).  Existing
+    models not re-characterised in this run are preserved, so per-arch
+    recalibration is incremental.  Raw measured points are stored next to
+    the fits for the EXPERIMENTS.md tables and round-trip tests.
+    """
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        blob = {}
+    blob["_meta"] = dict(
+        meta, generator="PYTHONPATH=src python -m "
+                        "repro.launch.calibrate_resilience",
+        metric="top1_disagreement_pct")
+    models = blob.setdefault("models", {})
+    for arch, (res, curves) in entries.items():
+        models[arch] = {
+            "config_name": res.model,
+            "family": res.family,
+            "ber_grid": [float(b) for b in res.ber_grid],
+            "n_seeds": res.n_seeds,
+            "curves": {op: curve_to_dict(curves[op])
+                       for op in res.operators},
+            "loss_pct": {op: [float(v) for v in res.loss_pct[:, j]]
+                         for j, op in enumerate(res.operators)},
+        }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    load_measured.cache_clear()      # the loader must see the new artifact
+    return blob

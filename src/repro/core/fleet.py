@@ -89,6 +89,12 @@ class FleetRuntime:
                                              curves=curves)
             elif policy == "baseline":
                 policy = BaselinePolicy(t_clk=self.cal.lifetime_cfg.t_clk)
+            elif policy == "measured":
+                # measured in-repo curves (resilience_calibrated.json);
+                # pass a MeasuredResiliencePolicy instance to pick a
+                # specific zoo model (the string form uses its default)
+                policy = get_policy("measured", ber_model=self.cal.ber,
+                                    curves=curves)
             else:
                 policy = get_policy(policy)
         self.policy = policy
@@ -116,9 +122,18 @@ class FleetRuntime:
     def for_model(cls, cfg, **kw) -> "FleetRuntime":
         """Fleet with the architecture family's operator-domain set
         (DESIGN.md §Arch-applicability): attention-free families get their
-        projection domains instead of the vacuous qkt/sv rows."""
+        projection domains instead of the vacuous qkt/sv rows.  With
+        ``policy="measured"`` the artifact lookup is keyed on THIS model
+        (uncharacterised family domains fall back to the defaults inside
+        the policy)."""
         from .resilience import default_curves, operators_for
         ops = operators_for(cfg.family)
+        if kw.get("policy") == "measured":
+            from .policy import MeasuredResiliencePolicy
+            cal = kw.setdefault("cal", load_calibration())
+            kw["policy"] = MeasuredResiliencePolicy(ber_model=cal.ber,
+                                                    model=cfg.name)
+            return cls(operators=ops, **kw)
         return cls(operators=ops, curves=default_curves(ops), **kw)
 
     # ------------------------------------------------------------------ #

@@ -14,6 +14,10 @@ evaluates as ONE vmapped lifetime scan via :func:`sweep_policy`.
   inverting the BER model at each operator's tolerable BER at the scenario's
   accuracy budget (``scenario.max_loss_pct``).  Voltage increases are
   deferred while the induced BER stays within the operator's resilience.
+* :class:`MeasuredResiliencePolicy` (``"measured"``) — the same deferral
+  machinery, but the curves are the logistic fits MEASURED on a zoo model
+  by the batched fault-injection sweep (``resilience_calibrated.json``),
+  closing the loop inject -> fit -> tolerable BER -> delay_max -> simulate.
 
 New policies register by name via :func:`register_policy` and are resolved
 with :func:`get_policy` (used by ``FleetRuntime`` and the launchers).
@@ -32,7 +36,8 @@ from .ber import BerModel
 from .constants import DEFAULT_MAX_LOSS_PCT, T_CLK
 from .delay import DelayPolynomial
 from .power import PowerModel, batched_lifetime_stats
-from .resilience import OPERATORS, ResilienceCurve, default_curves, tolerable_bers
+from .resilience import (OPERATORS, ResilienceCurve, default_curves,
+                         measured_curves, tolerable_bers)
 from .scenario import LifetimeTrajectory, Scenario
 
 
@@ -100,8 +105,12 @@ class FaultTolerantPolicy:
         return DEFAULT_MAX_LOSS_PCT if self.max_loss_pct is None \
             else self.max_loss_pct
 
+    def _curves_for(self, operators) -> Mapping[str, ResilienceCurve]:
+        """Curve source hook — subclasses swap where curves come from."""
+        return self.curves or default_curves(tuple(operators))
+
     def _curve_params(self, operators):
-        curves = self.curves or default_curves(tuple(operators))
+        curves = self._curves_for(tuple(operators))
         ber50 = np.array([curves[op].ber50 for op in operators], np.float64)
         steep = np.array([curves[op].steepness for op in operators],
                          np.float64)
@@ -133,13 +142,41 @@ class FaultTolerantPolicy:
 
     # legacy scalar API ------------------------------------------------- #
     def tolerable_ber(self) -> Dict[str, float]:
-        return tolerable_bers(self.curves or default_curves(),
+        return tolerable_bers(dict(self._curves_for(OPERATORS)),
                               self._budget_scalar())
 
     def delay_max(self) -> Dict[str, float]:
         tols = self.tolerable_ber()
         return {op: self.ber_model.delay_max_for_ber(tol)
                 for op, tol in tols.items()}
+
+
+@register_policy
+@dataclasses.dataclass(frozen=True)
+class MeasuredResiliencePolicy(FaultTolerantPolicy):
+    """Fault-tolerant AVS driven by resilience curves MEASURED in-repo.
+
+    Identical thresholds machinery to :class:`FaultTolerantPolicy`; the
+    only change is where the curves come from: the per-``model`` logistic
+    fits of the batched fault-injection sweep
+    (:func:`repro.calibrate.resilience_sweep.empirical_resilience`),
+    loaded from the checked-in ``resilience_calibrated.json`` artifact.
+    Operator domains the sweep did not characterise (or an artifact from a
+    partial run) fall back to the published defaults, so the policy is
+    always total over the requested operator set.  An explicit ``curves``
+    mapping overrides the artifact entirely — that is also how the parity
+    tests pin "measured == published" and recover Table II exactly.
+    """
+    name = "measured"
+    model: str = "llama3_8b"
+    artifact_path: str | None = None
+
+    def _curves_for(self, operators) -> Mapping[str, ResilienceCurve]:
+        if self.curves is not None:
+            return FaultTolerantPolicy._curves_for(self, operators)
+        measured = measured_curves(self.model, self.artifact_path)
+        defaults = default_curves(tuple(operators))
+        return {op: measured.get(op, defaults[op]) for op in operators}
 
 
 # --------------------------------------------------------------------------- #

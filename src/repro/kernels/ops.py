@@ -74,6 +74,23 @@ def make_flip_randoms(key: jax.Array, shape: tuple[int, ...]):
     return u, pos
 
 
+def _flip_inputs(x: jax.Array, key: jax.Array, block_rows: int = 256):
+    """Shared injection preamble: (R, 128)-tiled words + their randoms.
+
+    The layout (and therefore the random stream) is identical for the
+    Pallas kernel and the jnp oracle, so the two routes are bit-exact.
+    """
+    n = int(np.prod(x.shape))
+    rows = -(-n // 128)
+    rows_pad = -(-rows // block_rows) * block_rows
+    # zero-pad (NOT jnp.resize, which tiles real accumulator words into the
+    # pad region — wasted RNG spent flipping copies of live data)
+    xf = jnp.pad(x.reshape(-1), (0, rows_pad * 128 - n)).reshape(rows_pad,
+                                                                 128)
+    u, pos = make_flip_randoms(key, (rows_pad, 128))
+    return xf, u, pos, n
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def inject_bitflips(x: jax.Array, ber, key: jax.Array, *,
                     interpret: bool | None = None) -> jax.Array:
@@ -83,20 +100,29 @@ def inject_bitflips(x: jax.Array, ber, key: jax.Array, *,
     """
     if interpret is None:
         interpret = _default_interpret()
-    orig_shape = x.shape
-    n = int(np.prod(orig_shape))
     block_rows = 256
-    rows = -(-n // 128)
-    rows_pad = -(-rows // block_rows) * block_rows
-    # zero-pad (NOT jnp.resize, which tiles real accumulator words into the
-    # pad region — wasted RNG spent flipping copies of live data)
-    xf = jnp.pad(x.reshape(-1), (0, rows_pad * 128 - n)).reshape(rows_pad,
-                                                                 128)
-    u, pos = make_flip_randoms(key, (rows_pad, 128))
+    xf, u, pos, n = _flip_inputs(x, key, block_rows)
     q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
     out = bitflip_words(xf, u, pos, q[None], block_rows=block_rows,
                         interpret=interpret)
-    return out.reshape(-1)[:n].reshape(orig_shape)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+@jax.jit
+def inject_bitflips_ref(x: jax.Array, ber, key: jax.Array) -> jax.Array:
+    """Pure-jnp injection, bit-exact vs :func:`inject_bitflips`.
+
+    Same word layout, same random draws, same flip rule — only the
+    executor differs (``ref.bitflip_words_ref`` instead of the Pallas
+    kernel).  This is what the kernel-free ``aged_linear`` route uses:
+    unlike a ``pallas_call`` in interpret mode, plain jnp vectorises
+    cleanly under ``vmap`` (the resilience-characterisation sweep maps
+    whole fault grids over lanes; see ``benchmarks/resilience_bench.py``).
+    """
+    xf, u, pos, n = _flip_inputs(x, key)
+    q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
+    out = ref.bitflip_words_ref(xf, u, pos, q[None])
+    return out.reshape(-1)[:n].reshape(x.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -197,6 +223,9 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
     if inject:
         if key is None:
             key = jax.random.PRNGKey(seed)
-        acc = inject_bitflips(acc, ber, key, interpret=interpret)
+        # kernel-free route stays kernel-free: the jnp oracle injection is
+        # bit-exact vs the Pallas kernel and vmap-friendly
+        acc = (inject_bitflips(acc, ber, key, interpret=interpret)
+               if use_kernel else inject_bitflips_ref(acc, ber, key))
     out = acc.astype(jnp.float32) * xs * ws
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)

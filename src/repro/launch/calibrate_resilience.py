@@ -1,0 +1,200 @@
+"""Resilience-calibration launcher: measure the zoo, fit, close the loop.
+
+``python -m repro.launch.calibrate_resilience [--archs all|id,id,...]
+[--quick] [--seeds N] [--train-steps N] [--report]``
+
+For every requested model-zoo config (reduced, briefly trained on the
+synthetic LM task) this runs the batched fault-injection characterisation
+sweep — the whole BER grid x operator-domain grid of a model as vmapped
+fault lanes of ONE dispatch (:mod:`repro.calibrate.resilience_sweep`) —
+fits the per-operator logistic curves, and merges them into the checked-in
+``src/repro/core/resilience_calibrated.json`` artifact.  Serving then
+closes the loop with ``--policy measured``
+(:class:`repro.core.policy.MeasuredResiliencePolicy`):
+measured curves -> tolerable BERs -> per-operator ``delay_max`` ->
+``simulate()`` lifetime scan -> the BERs every matmul runs at.
+
+``--report`` regenerates the Table II policy evaluation from the measured
+curves of each characterised model and prints the per-operator
+measured-vs-published BER50 and the power-saving delta (the numbers quoted
+in EXPERIMENTS.md §Resilience-Calibration).
+
+``--quick`` is the CI variant: one tiny config, coarse BER grid, one seed,
+interpret-mode-friendly sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calibrate.resilience_sweep import (DEFAULT_BER_GRID,
+                                              QUICK_BER_GRID,
+                                              empirical_resilience,
+                                              write_artifact)
+from repro.configs import ARCH_IDS, get_config
+from repro.core.artifacts import load_calibration
+from repro.core.policy import (FaultTolerantPolicy, MeasuredResiliencePolicy,
+                               evaluate_policy)
+from repro.core.resilience import (DEFAULT_BER50, MEASURED_PATH,
+                                   load_measured)
+from repro.core.scenario import Scenario
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def _extras_for(cfg, batch: int, seed: int = 0) -> tuple:
+    """Deterministic encoder frames / prefix embeddings for the non-LM
+    model families — shared between training and the sweep evaluation."""
+    rng = np.random.RandomState(seed)
+    if cfg.n_encoder_layers:
+        return (rng.randn(batch, cfg.encoder_seq,
+                          cfg.d_model).astype(np.float32),)
+    if cfg.prefix_tokens:
+        return (rng.randn(batch, cfg.prefix_tokens,
+                          cfg.d_model).astype(np.float32),)
+    return ()
+
+
+def _train_params(cfg, data, extras, steps: int):
+    """Briefly train the reduced config so its logits carry structure the
+    injection can disrupt; ``steps=0`` keeps the random init."""
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    if steps <= 0:
+        return state.params
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=5)))
+    extra_keys = ("frames",) if cfg.n_encoder_layers else \
+        (("prefix_embeds",) if cfg.prefix_tokens else ())
+    for i in range(steps):
+        tb = data.batch_at(i)
+        batch = {"tokens": jnp.asarray(tb.tokens),
+                 "labels": jnp.asarray(tb.labels)}
+        for k, v in zip(extra_keys, extras):
+            batch[k] = jnp.asarray(v)
+        state, _ = step(state, batch)
+    return state.params
+
+
+def characterise(arch: str, *, ber_grid, n_seeds: int, train_steps: int,
+                 batch: int, seq_len: int, use_kernel: bool, fused: bool):
+    cfg = get_config(arch).reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=seq_len, global_batch=batch)
+    extras = _extras_for(cfg, batch)
+    params = _train_params(cfg, data, extras, train_steps)
+    tokens = data.batch_at(10_000).tokens          # held-out step
+    t0 = time.time()
+    curves, res = empirical_resilience(
+        cfg, params, tokens, ber_grid=ber_grid, n_seeds=n_seeds,
+        extras=extras, use_kernel=use_kernel, fused=fused, model=cfg.name)
+    dt = time.time() - t0
+    lanes = len(ber_grid) * len(res.operators)
+    print(f"[calibrate] {arch}: {lanes} fault lanes x {n_seeds} seed(s) "
+          f"in {dt:.1f}s ({lanes * n_seeds / dt:.1f} grid points/s, "
+          f"one dispatch per seed)")
+    for j, op in enumerate(res.operators):
+        d50 = DEFAULT_BER50.get(op, float("nan"))
+        print(f"    {op:>6}: measured BER50 {curves[op].ber50:.2e} "
+              f"(published {d50:.2e}), knee steepness "
+              f"{curves[op].steepness:.1f}/decade")
+    return res, curves
+
+
+def report(path: str | None = None) -> dict:
+    """Measured-vs-published Table II: re-run the policy evaluation with
+    each model's measured curves and report the power-saving delta."""
+    cal = load_calibration()
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    pub = evaluate_policy(FaultTolerantPolicy(ber_model=cal.ber),
+                          cal.aging, cal.delay_poly, cal.power, scn)
+    print(f"[report] published curves: avg lifetime power saving "
+          f"{pub['avg_power_saving_pct']:.1f}%")
+    out = {"published_avg_saving_pct": pub["avg_power_saving_pct"],
+           "models": {}}
+    blob = load_measured(path or MEASURED_PATH)
+    for arch in sorted(blob.get("models", {})):
+        pol = MeasuredResiliencePolicy(ber_model=cal.ber, model=arch,
+                                       artifact_path=path)
+        res = evaluate_policy(pol, cal.aging, cal.delay_poly, cal.power, scn)
+        delta = res["avg_power_saving_pct"] - pub["avg_power_saving_pct"]
+        print(f"[report] {arch:>18}: avg saving "
+              f"{res['avg_power_saving_pct']:+.1f}% "
+              f"(delta vs published {delta:+.1f} pts); per-op V_final: "
+              + ", ".join(f"{op}={res[op]['v_final']:.2f}"
+                          for op in ("q", "k", "o", "down")))
+        out["models"][arch] = {
+            "avg_saving_pct": res["avg_power_saving_pct"],
+            "delta_vs_published_pts": delta}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch ids, or 'all' (default: all;"
+                         " with --quick: llama3_8b)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI variant: tiny config, coarse BER grid, 1 seed")
+    ap.add_argument("--ber-grid", default=None,
+                    help="comma-separated BERs (default: log grid)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="seed repeats averaged per grid point")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="brief-training steps before measuring (0: random "
+                         "init)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route weight matmuls through the Pallas systolic "
+                         "path (with --fused: the serving hot-path kernel; "
+                         "interpret mode off-TPU — slow, same statistics)")
+    ap.add_argument("--fused", action="store_true")
+    ap.add_argument("--out", default=MEASURED_PATH)
+    ap.add_argument("--report", action="store_true",
+                    help="skip measuring; regenerate the measured-vs-"
+                         "published Table II deltas from the artifact")
+    args = ap.parse_args(argv)
+
+    if args.report:
+        return report(args.out if args.out != MEASURED_PATH else None)
+
+    if args.archs:
+        archs = list(ARCH_IDS) if args.archs == "all" \
+            else [a.strip().replace("-", "_")
+                  for a in args.archs.split(",") if a.strip()]
+    else:
+        archs = ["llama3_8b"] if args.quick else list(ARCH_IDS)
+    if args.ber_grid:
+        grid = tuple(float(b) for b in args.ber_grid.split(","))
+    else:
+        grid = QUICK_BER_GRID if args.quick else DEFAULT_BER_GRID
+    n_seeds = args.seeds if args.seeds is not None else (1 if args.quick
+                                                        else 2)
+    train_steps = args.train_steps if args.train_steps is not None \
+        else (8 if args.quick else 40)
+    batch = args.batch or (4 if args.quick else 8)
+    seq_len = args.seq_len or (32 if args.quick else 64)
+
+    entries = {}
+    for arch in archs:
+        entries[arch] = characterise(
+            arch, ber_grid=grid, n_seeds=n_seeds, train_steps=train_steps,
+            batch=batch, seq_len=seq_len, use_kernel=args.use_kernel,
+            fused=args.fused)
+    meta = {"mode": "quick" if args.quick else "full",
+            "ber_grid": [float(b) for b in grid], "n_seeds": n_seeds,
+            "train_steps": train_steps, "batch": [batch, seq_len],
+            "backend": jax.default_backend(),
+            "kernel": "fused" if (args.use_kernel and args.fused)
+            else ("systolic" if args.use_kernel else "jnp-oracle")}
+    write_artifact(entries, meta, path=args.out)
+    print(f"[calibrate] wrote {args.out} ({len(entries)} model(s))")
+    return entries
+
+
+if __name__ == "__main__":
+    main()

@@ -46,9 +46,13 @@ def main(argv=None):
                     help="0 = greedy; >0 samples softmax(logits/T)")
     ap.add_argument("--top-k", type=int, default=None,
                     help="restrict sampling to the k highest logits")
+    ap.add_argument("--policy", default=None,
+                    choices=("fault_tolerant", "baseline", "measured"),
+                    help="AVS policy; 'measured' uses THIS arch's curves "
+                         "from resilience_calibrated.json (regenerate with "
+                         "repro.launch.calibrate_resilience)")
     ap.add_argument("--baseline-avs", action="store_true",
-                    help="resilience-agnostic policy (raise V on every "
-                         "violation) instead of fault-tolerant")
+                    help="legacy alias for --policy baseline")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run weight matmuls through the int8 systolic "
                          "Pallas kernel (interpret mode on CPU: slow)")
@@ -59,10 +63,17 @@ def main(argv=None):
 
     cfg = get_config(args.arch).reduced()
     params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    pol = args.policy or ("baseline" if args.baseline_avs
+                          else "fault_tolerant")
+    if pol == "measured":
+        # key the artifact lookup on the served arch — the closed loop:
+        # measured curves -> tolerable BER -> delay_max -> admitted BERs
+        from repro.core.artifacts import load_calibration
+        from repro.core.policy import MeasuredResiliencePolicy
+        pol = MeasuredResiliencePolicy(ber_model=load_calibration().ber,
+                                       model=args.arch)
     fleet = FleetRuntime(
-        n_devices=args.n_devices,
-        policy="baseline" if args.baseline_avs else "fault_tolerant",
-        max_loss_pct=args.budget)
+        n_devices=args.n_devices, policy=pol, max_loss_pct=args.budget)
     for i in range(args.n_devices):
         fleet.set_age(years=args.age_years * (i + 1) / args.n_devices,
                       device=i)
@@ -83,7 +94,7 @@ def main(argv=None):
         extra["frames"] = np.zeros(
             (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
 
-    pol = "baseline" if args.baseline_avs else "fault-tolerant"
+    pol = getattr(fleet.policy, "name", "fault_tolerant")
     if fleet_mode:
         engine = FleetServeEngine(cfg, params, fleet, max_len=max_len,
                                   use_systolic_kernel=args.use_kernel)

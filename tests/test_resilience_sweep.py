@@ -1,0 +1,217 @@
+"""Measured-resilience closed loop: batched fault-injection sweep, logistic
+fit, JSON artifact round-trip, MeasuredResiliencePolicy parity, and the
+zero-retrace guard across the BER x operator grid."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.calibrate import resilience_sweep as rs
+from repro.configs import get_config
+from repro.core.artifacts import load_calibration
+from repro.core.policy import (FaultTolerantPolicy, MeasuredResiliencePolicy,
+                               evaluate_policy, get_policy)
+from repro.core.resilience import (OPERATORS, ResilienceCurve,
+                                   default_curves, load_measured,
+                                   measured_curves)
+from repro.core.scenario import Scenario
+from repro.data import SyntheticLM
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("llama3_8b").reduced()
+    from repro.train.steps import init_train_state
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    tokens = SyntheticLM(vocab=cfg.vocab, seq_len=16,
+                         global_batch=2).batch_at(0).tokens
+    return cfg, params, tokens
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+# --------------------------------------------------------------------------- #
+# synthetic knee recovery — end to end through the sweep harness
+# --------------------------------------------------------------------------- #
+def test_fit_recovers_synthetic_knee_through_harness(tmp_path):
+    """Losses generated from KNOWN logistic curves, pushed through the
+    harness's fit + artifact + loader + policy chain, must come back with
+    the planted knees."""
+    ops = ("q", "o", "down")
+    planted = {"q": ResilienceCurve(ber50=3e-4, steepness=4.0),
+               "o": ResilienceCurve(ber50=2e-6, steepness=6.0),
+               "down": ResilienceCurve(ber50=5e-5, steepness=3.0)}
+    grid = np.logspace(-8, -2, 25)
+    loss = np.stack([[planted[op].accuracy_loss(b) for op in ops]
+                     for b in grid])
+    res = rs.SweepResult(model="synthetic", family="dense", operators=ops,
+                         ber_grid=grid, loss_pct=loss, n_seeds=1)
+    curves = rs.fit_sweep(res)
+    for op in ops:
+        assert np.log10(curves[op].ber50) == pytest.approx(
+            np.log10(planted[op].ber50), abs=0.35), op
+        # the policy-relevant quantity: tolerable BER within a factor of 2
+        assert curves[op].tolerable_ber(0.5) == pytest.approx(
+            planted[op].tolerable_ber(0.5), rel=1.0), op
+
+    # ... and survives the artifact round-trip bit-for-bit
+    path = str(tmp_path / "measured.json")
+    rs.write_artifact({"synthetic": (res, curves)}, {"mode": "test"},
+                      path=path)
+    loaded = measured_curves("synthetic", path)
+    assert loaded == curves
+    raw = json.loads(open(path).read())
+    np.testing.assert_allclose(raw["models"]["synthetic"]["loss_pct"]["o"],
+                               loss[:, 1])
+    load_measured.cache_clear()
+
+
+def test_sweep_measures_real_knee(tiny_setup):
+    """Real injection on a real (random-init) zoo model: losses start near
+    zero, collapse toward chance at saturating BER, and the fitted knee is
+    bracketed by the grid."""
+    cfg, params, tokens = tiny_setup
+    curves, res = rs.empirical_resilience(
+        cfg, params, tokens, ber_grid=(1e-7, 1e-4, 3e-2), n_seeds=1)
+    assert res.loss_pct.shape == (3, len(OPERATORS))
+    assert (res.loss_pct >= 0).all() and (res.loss_pct <= 100).all()
+    assert res.loss_pct[0].max() < 20.0          # vanishing BER: near-clean
+    assert res.loss_pct[-1].max() > 40.0         # saturating BER: collapsed
+    # every operator's loss is (weakly) monotone along this coarse grid
+    worst_drop = (res.loss_pct[:-1] - res.loss_pct[1:]).max()
+    assert worst_drop < 15.0
+    for op, c in curves.items():
+        assert 1e-9 < c.ber50 < 1.0, op
+
+
+def test_sweep_fused_kernel_path_runs(tiny_setup):
+    """The fused aged-matmul (serving hot path) drives the same sweep —
+    interpret mode, tiny grid."""
+    cfg, params, tokens = tiny_setup
+    res = rs.run_sweep(cfg, params, tokens[:1, :8], ber_grid=(1e-3,),
+                       operators=("q", "o"), n_seeds=1,
+                       use_kernel=True, fused=True)
+    assert res.loss_pct.shape == (1, 2)
+    assert np.isfinite(res.loss_pct).all()
+
+
+# --------------------------------------------------------------------------- #
+# zero-retrace: the whole grid compiles exactly once
+# --------------------------------------------------------------------------- #
+def test_grid_single_trace_and_zero_retrace(tiny_setup):
+    """One model's whole BER x operator grid is ONE trace of the vmapped
+    evaluation — and re-sweeping with different BER values and fresh seeds
+    (same grid length) re-jits nothing: BERs/keys are traced FaultConfig
+    leaves, exactly like the serving engine's."""
+    cfg, params, tokens = tiny_setup
+    grid_a = (1e-6, 1e-4, 1e-3)
+    rs.run_sweep(cfg, params, tokens, ber_grid=grid_a, n_seeds=1)
+    assert rs.TRACE_COUNTS["grid_eval"] >= 1
+    before = dict(rs.TRACE_COUNTS)
+    grid_b = (3e-6, 3e-4, 3e-3)                   # new values, same length
+    rs.run_sweep(cfg, params, tokens, ber_grid=grid_b, n_seeds=2, seed=42)
+    assert dict(rs.TRACE_COUNTS) == before
+
+
+def test_grid_fault_config_lane_layout():
+    ops = ("q", "k", "o")
+    grid = (1e-5, 1e-3)
+    fi = rs.grid_fault_config(ops, grid, jax.random.PRNGKey(0))
+    for j, op in enumerate(ops):
+        col = np.asarray(fi.bers[op])
+        assert col.shape == (6,)
+        for b, ber in enumerate(grid):
+            for jj in range(len(ops)):
+                expect = ber if jj == j else 0.0
+                assert col[b * len(ops) + jj] == pytest.approx(expect)
+
+
+# --------------------------------------------------------------------------- #
+# MeasuredResiliencePolicy: closes the loop, degenerates to FaultTolerant
+# --------------------------------------------------------------------------- #
+def test_measured_policy_defaults_match_fault_tolerant(cal):
+    """Fed the published default curves, the measured policy IS the
+    fault-tolerant policy — identical thresholds, scalar and batched."""
+    ft = FaultTolerantPolicy(ber_model=cal.ber)
+    mp = MeasuredResiliencePolicy(ber_model=cal.ber,
+                                  curves=default_curves())
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    np.testing.assert_array_equal(np.asarray(ft.thresholds(scn)),
+                                  np.asarray(mp.thresholds(scn)))
+    batch = scn.replace(max_loss_pct=np.asarray([0.1, 0.5, 2.0]))
+    np.testing.assert_array_equal(np.asarray(ft.thresholds(batch)),
+                                  np.asarray(mp.thresholds(batch)))
+    assert ft.tolerable_ber() == mp.tolerable_ber()
+
+
+def test_measured_policy_reproduces_table2_on_default_curves(cal):
+    """The acceptance gate: measured curves == published defaults must
+    regenerate Table II within tolerance (same avg power saving)."""
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    mp = MeasuredResiliencePolicy(ber_model=cal.ber, curves=default_curves())
+    res = evaluate_policy(mp, cal.aging, cal.delay_poly, cal.power, scn)
+    assert abs(res["avg_power_saving_pct"] - 14.0) < 2.0
+    assert res["o"]["v_final"] == max(res[op]["v_final"] for op in OPERATORS)
+
+
+def test_measured_policy_from_checked_in_artifact(cal):
+    """The checked-in resilience_calibrated.json feeds the registry path:
+    measured knees for the tiny zoo models sit below the published ones on
+    the tolerant domains, so the measured policy is more conservative
+    there (>= thresholds)."""
+    pol = get_policy("measured", ber_model=cal.ber, model="llama3_8b")
+    curves = pol._curves_for(OPERATORS)
+    assert set(curves) == set(OPERATORS)
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg)
+    dmax_measured = np.asarray(pol.thresholds(scn))
+    dmax_default = np.asarray(
+        FaultTolerantPolicy(ber_model=cal.ber).thresholds(scn))
+    assert dmax_measured.shape == dmax_default.shape == (len(OPERATORS),)
+    q = OPERATORS.index("q")
+    assert dmax_measured[q] <= dmax_default[q] + 1e-12
+
+
+def test_fleet_runtime_measured_policy():
+    from repro.core.fleet import FleetRuntime
+    fleet = FleetRuntime(n_devices=2, policy="measured")
+    fleet.set_age(years=5.0)
+    assert fleet.policy.name == "measured"
+    mat = fleet.op_ber_array()
+    assert mat.shape == (2, len(OPERATORS))
+    assert np.isfinite(mat).all()
+
+    cfg = get_config("rwkv6_3b").reduced()
+    fam = FleetRuntime.for_model(cfg, policy="measured")
+    assert fam.policy.model == cfg.name        # artifact keyed on the model
+    assert "r" in fam.operators and "qkt" not in fam.operators
+    fam.set_age(years=5.0)
+    assert np.isfinite(fam.op_ber_array()).all()
+
+
+def test_measured_curves_missing_model_hint():
+    with pytest.raises(KeyError, match="calibrate_resilience"):
+        measured_curves("no_such_model_xyz")
+
+
+# --------------------------------------------------------------------------- #
+# example closing section (the runnable recalibration path)
+# --------------------------------------------------------------------------- #
+def test_example_recalibration_section(tiny_setup, capsys):
+    import importlib.util
+    from pathlib import Path
+    ex = Path(__file__).resolve().parent.parent / "examples" \
+        / "aging_aware_serving.py"
+    spec = importlib.util.spec_from_file_location("aging_aware_serving", ex)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    cfg, params, tokens = tiny_setup
+    curves = mod.recalibrate_for_deployment(cfg, params, tokens,
+                                            ber_grid=(1e-5, 1e-3),
+                                            n_seeds=1)
+    assert set(curves) == set(OPERATORS)
+    out = capsys.readouterr().out
+    assert "measured" in out

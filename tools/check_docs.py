@@ -2,7 +2,7 @@
 """Docs reference checker: fail CI on dangling intra-repo references.
 
 Guards against the EXPERIMENTS.md class of bug — a docstring or document
-citing a repo file that does not exist.  Two passes:
+citing a repo file that does not exist.  Three passes:
 
 1. **Markdown links** — every relative link target in every ``*.md`` file
    (anchors stripped) must exist on disk, resolved against the file's
@@ -13,11 +13,22 @@ citing a repo file that does not exist.  Two passes:
    root, ``dir/<name>.md`` paths against the repo root or the mentioning
    file's directory.  ``SNIPPETS.md`` / ``PAPERS.md`` are exempt from
    this pass: they quote *external* repos' files as provenance.
+3. **Sphinx roles** — every ``:func:`` / ``:class:`` / ``:meth:`` /
+   ``:mod:`` / ``:data:`` reference in docstrings and markdown must
+   resolve against a statically-built symbol table of the repo's own
+   python sources (ast only — no imports, so the pass runs before any
+   install).  Guards against the ``:func:`empirical_resilience``` class
+   of bug: a docstring promising an entry point that does not exist.
+   Fully-qualified dotted paths resolve module -> symbol [-> method];
+   bare names resolve against any top-level symbol, class or method
+   defined anywhere in the repo (lenient by design — the target of this
+   pass is promised-but-absent symbols, not ambiguous shorthand).
 
 Run:  python tools/check_docs.py
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -25,11 +36,17 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 SKIP_DIRS = {".git", ".claude", ".pytest_cache", "__pycache__",
              ".hypothesis", "results", "node_modules"}
-MENTION_EXEMPT = {"SNIPPETS.md", "PAPERS.md"}
+# SNIPPETS/PAPERS quote external repos' files as provenance; ISSUE.md is
+# the incoming task spec (may cite files the task is about to create)
+MENTION_EXEMPT = {"SNIPPETS.md", "PAPERS.md", "ISSUE.md"}
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MD_MENTION = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.md\b")
 EXTERNAL = re.compile(r"^(https?|mailto|ftp):")
+SPHINX_ROLE = re.compile(r":(func|class|meth|mod|data):`([^`]+)`")
+# a resolvable target: dotted identifier path, optional ~ prefix / () suffix
+ROLE_TARGET = re.compile(r"^~?[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_]"
+                         r"[A-Za-z0-9_]*)*(\(\))?$")
 
 
 def _files(suffix: str):
@@ -72,8 +89,115 @@ def check_mentions() -> list[str]:
     return errors
 
 
+# --------------------------------------------------------------------------- #
+# pass 3: Sphinx-style :func:/:class:/:meth:/:mod:/:data: references
+# --------------------------------------------------------------------------- #
+def _module_name(path: Path) -> str:
+    rel = path.relative_to(ROOT).with_suffix("")
+    parts = list(rel.parts)
+    if parts[0] == "src":
+        parts = parts[1:]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _symbol_table():
+    """Static (ast) symbol table of every repo python file.
+
+    Returns ``(modules, methods, global_names)`` where ``modules`` maps a
+    module path to its top-level names, ``methods`` maps
+    ``module -> class -> method/attr names``, and ``global_names`` is the
+    union of all top-level names, class names and method names (the
+    fallback for bare references).
+    """
+    modules: dict[str, set[str]] = {}
+    methods: dict[str, dict[str, set[str]]] = {}
+    global_names: set[str] = set()
+    for p in _files(".py"):
+        try:
+            tree = ast.parse(p.read_text(encoding="utf-8"))
+        except SyntaxError:
+            continue            # pass 0 of some other tool's problem
+        mod = _module_name(p)
+        top: set[str] = set()
+        cls_methods: dict[str, set[str]] = {}
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                top.add(node.name)
+                if isinstance(node, ast.ClassDef):
+                    names = set()
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            names.add(sub.name)
+                        elif isinstance(sub, ast.AnnAssign) and \
+                                isinstance(sub.target, ast.Name):
+                            names.add(sub.target.id)
+                        elif isinstance(sub, ast.Assign):
+                            names.update(t.id for t in sub.targets
+                                         if isinstance(t, ast.Name))
+                    cls_methods[node.name] = names
+                    global_names.update(names)
+            elif isinstance(node, ast.Assign):
+                top.update(t.id for t in node.targets
+                           if isinstance(t, ast.Name))
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                top.add(node.target.id)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                top.update((a.asname or a.name).split(".")[0]
+                           for a in node.names if a.name != "*")
+        modules[mod] = top
+        methods[mod] = cls_methods
+        global_names.update(top)
+    # bare :mod:`bitflip` references resolve by module basename
+    global_names.update(m.rsplit(".", 1)[-1] for m in modules if m)
+    return modules, methods, global_names
+
+
+def _resolves(target: str, role: str, modules, methods, global_names) -> bool:
+    name = target.lstrip("~").removesuffix("()")
+    if "." not in name:
+        return name in global_names or name in modules
+    parts = name.split(".")
+    # fully-qualified: longest known module prefix, then symbol [+ method]
+    for cut in range(len(parts), 0, -1):
+        mod = ".".join(parts[:cut])
+        if mod not in modules:
+            continue
+        rest = parts[cut:]
+        if not rest:
+            return True                      # a module (any role; :mod:)
+        if len(rest) == 1:
+            return rest[0] in modules[mod]
+        if len(rest) == 2:
+            return rest[1] in methods[mod].get(rest[0], set())
+        return False
+    if parts[0] in (p.split(".")[0] for p in modules):
+        return False         # rooted in a repo package but didn't resolve
+    # foreign dotted path (jax.numpy, pltpu.prng_seed, ...): out of scope
+    return True
+
+
+def check_sphinx_refs() -> list[str]:
+    modules, methods, global_names = _symbol_table()
+    errors = []
+    for path in list(_files(".py")) + [
+            p for p in _files(".md") if p.name not in MENTION_EXEMPT]:
+        rel = path.relative_to(ROOT)
+        for m in SPHINX_ROLE.finditer(path.read_text(encoding="utf-8")):
+            role, target = m.group(1), m.group(2)
+            if not ROLE_TARGET.match(target):
+                continue      # prose mentioning the role syntax itself
+            if not _resolves(target, role, modules, methods, global_names):
+                errors.append(f"{rel}: unresolved :{role}:`{target}`")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_mentions()
+    errors = check_links() + check_mentions() + check_sphinx_refs()
     if errors:
         print(f"check_docs: {len(errors)} dangling reference(s):")
         for e in errors:
