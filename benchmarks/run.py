@@ -8,8 +8,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("table1", "table2", "fig5", "scenarios", "kernels", "serve",
-            "resilience", "fig1b", "roofline")
+SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched", "kernels",
+            "serve", "resilience", "fig1b", "roofline")
 
 
 def main():
@@ -32,6 +32,9 @@ def main():
     if "scenarios" in want:
         from . import scenario_bench
         runners["scenarios"] = scenario_bench.run
+    if "sched" in want:
+        from . import sched_bench
+        runners["sched"] = sched_bench.run
     if "kernels" in want:
         from . import kernel_bench
         runners["kernels"] = kernel_bench.run

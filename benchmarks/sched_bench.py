@@ -1,0 +1,166 @@
+"""Benchmark: traffic-to-aging co-simulation — one scan vs per-epoch loop.
+
+The scheduler closes routing -> stress -> ΔVth -> policy voltage inside
+ONE jitted ``lax.scan`` per fleet (`repro.sched.lifetime.cosimulate`).
+The naive alternative — what a scheduler written as a Python control
+loop would do — dispatches one epoch at a time and round-trips the
+fleet state through the host to make the next routing decision.  This
+bench measures that choice and guards the structural claims:
+
+* **epochs/s** — warm throughput of the single-scan co-simulation (the
+  quantity the router-comparison CLI and the acceptance tests scale
+  with), against the same epochs dispatched one by one (the 1-epoch
+  scan is compiled once and reused, so the loop pays dispatch + host
+  sync only — the fair floor for a Python scheduler);
+* **structural guards** (wall-clock independent): the whole horizon
+  ticks exactly ONE trace of the co-sim body per (router, shape), and
+  re-routing fresh traffic / resuming from new fleet state ticks ZERO —
+  loads, scenario leaves, thresholds and initial state are all traced
+  arguments, so operating the scheduler never recompiles.
+
+``--quick`` is the CI variant.  Results are recorded to
+``BENCH_sched.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.artifacts import load_calibration
+from repro.core.constants import T_AMB
+from repro.core.policy import FaultTolerantPolicy
+from repro.core.resilience import OPERATORS
+from repro.core.scenario import Scenario
+from repro.sched import cosimulate, get_workload
+from repro.sched import lifetime as sched_lifetime
+
+from .common import check, table
+
+YEAR_S = 365.25 * 24 * 3600.0
+
+
+def _timed(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False) -> str:
+    n, E = (8, 96) if quick else (8, 480)
+    reps = 2 if quick else 3
+    cal = load_calibration()
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg).replace(
+        lifetime_s=5 * YEAR_S,
+        t_amb=jnp.asarray(T_AMB + np.linspace(0.0, 30.0, n), jnp.float32))
+    policy = FaultTolerantPolicy(ber_model=cal.ber)
+    dmax = policy.thresholds(scn, OPERATORS)
+    loads = get_workload("diurnal", n_devices=n, utilization=0.55,
+                         n_epochs=E).loads(0)
+    kw = dict(router="wear_level", n_devices=n)
+
+    # ------------------------------------------------------------------ #
+    # batched: the whole horizon as ONE scan
+    # ------------------------------------------------------------------ #
+    traces_at_entry = sched_lifetime.TRACE_COUNTS["cosim"]
+    t0 = time.perf_counter()
+    cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads, **kw)
+    jax.block_until_ready(cos.V)
+    compile_s = time.perf_counter() - t0
+
+    def batched():
+        out = cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads, **kw)
+        jax.block_until_ready(out.V)
+
+    t_batched = _timed(batched, reps)
+
+    # structural guards: one trace per (router, shape); re-routing fresh
+    # traffic from a different starting state re-jits nothing
+    before = dict(sched_lifetime.TRACE_COUNTS)
+    re_loads = get_workload("bursty", n_devices=n, utilization=0.45,
+                            n_epochs=E).loads(7)
+    out2 = cosimulate(cal.aging, cal.delay_poly, scn, dmax, re_loads,
+                      dv0=cos.dv[-1], v0=cos.V[-1], **kw)
+    jax.block_until_ready(out2.V)
+    zero_retrace = dict(sched_lifetime.TRACE_COUNTS) == before
+    # cold + warm reps + re-route all share one trace of the scan body
+    n_horizon_traces = (sched_lifetime.TRACE_COUNTS["cosim"]
+                        - traces_at_entry)
+    single_trace = n_horizon_traces == 1
+
+    # ------------------------------------------------------------------ #
+    # looped: one dispatch per epoch, fleet state through the host
+    # ------------------------------------------------------------------ #
+    loads_np = np.asarray(loads)
+    epoch_s = 5 * YEAR_S / E
+    n_loop = min(E, 16 if quick else 48)
+
+    def looped(n_epochs: int):
+        dv0 = jnp.zeros((n, len(OPERATORS), cos.dv.shape[-1]), jnp.float32)
+        v0 = jnp.broadcast_to(jnp.float32(scn.v_init),
+                              (n, len(OPERATORS)))
+        util0 = jnp.zeros((n,), jnp.float32)
+        for e in range(n_epochs):
+            step = cosimulate(cal.aging, cal.delay_poly, scn, dmax,
+                              loads_np[e:e + 1], epoch_s=epoch_s,
+                              dv0=dv0, v0=v0, util0=util0, **kw)
+            dv0 = step.dv[0]
+            v0 = step.V[0]
+            util0 = np.asarray(step.util)[0]       # host round-trip
+
+    looped(1)                                       # compile 1-epoch shape
+    t_loop = _timed(lambda: looped(n_loop), reps)
+    loop_est = t_loop * (E / n_loop)
+    speedup = loop_est / max(t_batched, 1e-9)
+
+    rows = [
+        ["one scan (cold, incl. compile)", f"{E}", f"{compile_s:.2f}s",
+         f"{E / compile_s:.0f}/s"],
+        ["one scan (warm)", f"{E}", f"{t_batched * 1e3:.0f}ms",
+         f"{E / t_batched:.0f}/s"],
+        [f"per-epoch loop est. ({n_loop} epochs measured)", f"{E}",
+         f"{loop_est * 1e3:.0f}ms", f"{E / loop_est:.0f}/s"],
+    ]
+    txt = table(f"Traffic co-sim: {E} epochs x {n} devices x "
+                f"{len(OPERATORS)} domains (wear_level router)",
+                ["path", "epochs", "wall", "epochs/s"], rows)
+    txt += "\n" + check("one jitted scan beats the per-epoch dispatch loop",
+                        t_batched < loop_est,
+                        f"{speedup:.1f}x")
+    txt += "\n" + check("whole horizon co-simulates in a SINGLE trace per "
+                        "(router, shape)", single_trace,
+                        f"horizon traces: {n_horizon_traces}")
+    txt += "\n" + check("re-routing fresh traffic re-jits nothing",
+                        zero_retrace)
+
+    record = {"mode": "quick" if quick else "full",
+              "backend": jax.default_backend(),
+              "n_devices": n, "n_epochs": E,
+              "compile_s": compile_s,
+              "batched_epochs_per_s": E / t_batched,
+              "looped_epochs_per_s": E / loop_est,
+              "batched_vs_looped_speedup": speedup,
+              "structural": {"single_trace_cosim": bool(single_trace),
+                             "zero_retrace_on_reroute": bool(zero_retrace)}}
+    path = Path(__file__).resolve().parent.parent / "BENCH_sched.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    return txt + f"\n[recorded] {path.name}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced horizon for CI")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(out)
+    if "[FAIL]" in out:
+        raise SystemExit(1)

@@ -15,11 +15,18 @@ vmapped over all four lanes, each lane running at its own device's
 policy-admitted BER vector.  Advancing the fleet's age between calls
 reuses the compiled function (the BERs are traced leaves).
 
-Finally closes the measured-resilience loop: a batched fault-injection
+Then closes the measured-resilience loop: a batched fault-injection
 sweep measures THIS model's per-operator BER -> loss knees and compares
 them against the published defaults the policy ships with
 (``recalibrate_for_deployment`` — the in-Python form of
 ``python -m repro.launch.calibrate_resilience``).
+
+Closing act — wear-leveling: the staggered fleet's future is not fate.
+Routing the next years of traffic with the ``wear_level`` router
+(``FleetRuntime.apply_load``) instead of spreading it uniformly steers
+requests away from the old/hot devices, cutting fleet-max ΔVth and the
+BER the worst device must serve at — the scheduler as an aging actuator
+(``python -m repro.launch.schedule`` for the full router comparison).
 
 Run:  PYTHONPATH=src python examples/aging_aware_serving.py
 """
@@ -158,6 +165,33 @@ def main():
     # ---------------------------------------------------------------- #
     recalibrate_for_deployment(cfg, params, data.batch_at(999).tokens,
                                ber_grid=(1e-5, 1e-4, 1e-3), n_seeds=1)
+
+    # ---------------------------------------------------------------- #
+    # closing act: route the NEXT years of traffic to slow aging down
+    # ---------------------------------------------------------------- #
+    print("\nwear-leveling the staggered fleet's next 3 years of diurnal "
+          "traffic (one jitted co-sim scan per router):")
+    finals = {}
+    for router in ("round_robin", "wear_level"):
+        fl = FleetRuntime(n_devices=len(AGES), policy="fault_tolerant")
+        for i, years in enumerate(AGES):
+            fl.set_age(years=max(years, 1e-3), device=i)
+        cos = fl.apply_load(workload="diurnal", router=router,
+                            n_epochs=144, utilization=0.55,
+                            horizon_s=3 * 365.25 * 24 * 3600.0)
+        wear = cos.device_wear()[-1]
+        worst = int(wear.argmax())
+        finals[router] = (wear, fl.op_ber_array().max())
+        print(f"  {router:>12}: fleet-max ΔVth {wear.max():6.2f} mV "
+              f"(spread {wear.max() - wear.min():5.2f} mV), worst-device "
+              f"BER {fl.op_ber_array()[worst].max():.1e}")
+    saved = 100 * (1 - finals["wear_level"][0].max()
+                   / finals["round_robin"][0].max())
+    print(f"Routing alone removed {saved:.1f}% of the fleet's worst-case "
+          "degradation: the wear_level router starves the 9.5-year device "
+          "while the young devices absorb the diurnal peaks — the same "
+          "serving stack then reads traffic-dependent BERs from "
+          "fleet.op_ber_array() with nothing recompiled.")
 
 
 if __name__ == "__main__":

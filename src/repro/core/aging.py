@@ -196,7 +196,12 @@ def stress_rates(params: AgingParams, *, duty=DUTY_FACTOR,
     base = jnp.where(is_bti, duty,
                      gamma * (transition_time / t_clk) * toggle)
     if recovery:
-        base = base * act / (act + params.chi * (1.0 - act))
+        # safe at act == 0 (an idle device in the traffic co-simulation):
+        # for chi == 0 populations (permanent traps) the balance factor is
+        # act/act — guard the denominator so 0-activity yields rate 0, not
+        # NaN; for act > 0 the maximum is a no-op.
+        base = base * act / jnp.maximum(act + params.chi * (1.0 - act),
+                                        1e-30)
     return base.astype(jnp.float32)
 
 

@@ -162,6 +162,73 @@ class FleetRuntime:
         return self._ensure_trajs()
 
     # ------------------------------------------------------------------ #
+    def apply_load(self, loads=None, *, workload="diurnal",
+                   router="wear_level", n_epochs: int = 480,
+                   horizon_s: Optional[float] = None,
+                   utilization: float = 0.5, key: int = 0,
+                   capacity: float = 1.0,
+                   heat_per_util: Optional[float] = None):
+        """Age the fleet under *routed traffic* instead of static stress.
+
+        Runs the :func:`repro.sched.lifetime.cosimulate` scan — routing
+        -> stress -> ΔVth -> policy voltage, closed per epoch — and
+        replaces the fleet's cached trajectories with the traffic-driven
+        ones, so every downstream consumer (``snapshot``, ``op_ber_array``,
+        the serving engines) sees BERs that reflect traffic-dependent age.
+
+        ``loads`` is an ``(E,)`` offered-load trace; alternatively
+        ``workload`` names a registered arrival model (or passes a
+        :class:`repro.sched.workload.Workload`) sized by ``utilization``.
+        The co-simulation *resumes from the fleet's current aged state*
+        (staggered ``set_age`` ages fold into the initial trap
+        populations).  Afterwards the fleet's age clock counts **service
+        time under the routed traffic** over ``[0, horizon_s]`` (default
+        horizon: the scenario's) and is positioned at the END of the
+        routed horizon — serving immediately after ``apply_load`` uses
+        the traffic-aged BERs, and a chained ``apply_load`` resumes from
+        the accumulated wear; ``set_age``/``advance`` rewind or replay
+        within the horizon.  Returns the
+        :class:`repro.sched.lifetime.CoSimTrajectory` (also kept on
+        ``self.last_cosim``).
+        """
+        from repro.sched import lifetime as sched_lifetime
+        from repro.sched.workload import Workload, get_workload
+
+        if loads is None:
+            wl = workload if isinstance(workload, Workload) else \
+                get_workload(workload, n_devices=self.n_devices,
+                             utilization=utilization, n_epochs=n_epochs)
+            loads = wl.loads(key)
+        loads = np.asarray(loads, np.float32)
+        dmax = self.policy.thresholds(self.scenario, self.operators)
+
+        dv0 = v0 = None
+        if np.any(self._ages_s > 0):        # resume from the aged state
+            traj = self._ensure_trajs()
+            idx = self._age_indices()[..., None]              # (N, O, 1)
+            v0 = np.take_along_axis(np.asarray(traj.V), idx,
+                                    axis=-1)[..., 0]
+            dv0 = np.take_along_axis(np.asarray(traj.dv),
+                                     idx[..., None], axis=-2)[..., 0, :]
+
+        if horizon_s is None:
+            horizon_s = float(np.mean(np.asarray(self.scenario.lifetime_s,
+                                                 np.float64)))
+        kw = {} if heat_per_util is None else \
+            {"heat_per_util": heat_per_util}
+        cos = sched_lifetime.cosimulate(
+            self.cal.aging, self.cal.delay_poly, self.scenario, dmax,
+            loads, router=router, n_devices=self.n_devices,
+            epoch_s=horizon_s / loads.shape[0], capacity=capacity,
+            dv0=dv0, v0=v0, **kw)
+        self._traj = cos.as_lifetime_trajectory()
+        self._snap = None
+        # service-time clock, positioned at the end of the routed horizon
+        self._ages_s[:] = float(np.asarray(cos.t)[-1])
+        self.last_cosim = cos
+        return cos
+
+    # ------------------------------------------------------------------ #
     def set_age(self, *, years=None, seconds=None, device=None):
         """Set the simulated age of one device (or the whole fleet)."""
         assert (years is None) != (seconds is None)

@@ -32,14 +32,32 @@ class PowerModel:
     s_slope: float = 0.085      # subthreshold slope [V/decade]
     k_dibl: float = 1.5         # supply sensitivity of leakage
 
-    def power(self, V, dvth_p_mv, dvth_n_mv):
-        """Instantaneous power [W]; dVth args in mV."""
+    def power_split(self, V, dvth_p_mv, dvth_n_mv):
+        """(dynamic, leakage) components [W]; dVth args in mV."""
         V = jnp.asarray(V)
         dv_mean = 0.5 * (jnp.asarray(dvth_p_mv) + jnp.asarray(dvth_n_mv)) * 1e-3
         dyn = self.p_dyn0 * (V / self.v0) ** 2
         leak = self.p_leak0 * (V / self.v0) * 10.0 ** (
             (self.k_dibl * (V - self.v0) - dv_mean) / self.s_slope)
+        return dyn, leak
+
+    def power(self, V, dvth_p_mv, dvth_n_mv):
+        """Instantaneous power [W] at full activity; dVth args in mV."""
+        dyn, leak = self.power_split(V, dvth_p_mv, dvth_n_mv)
         return dyn + leak
+
+    def power_at_activity(self, V, dvth_p_mv, dvth_n_mv, activity):
+        """Array power when the device is busy ``activity`` of the time.
+
+        The CV^2f dynamic term scales with the duty the scheduler routes
+        onto the device; subthreshold leakage burns regardless of load.
+        This is the quantity the traffic co-simulation
+        (:func:`repro.sched.lifetime.cosim_stats`) integrates: serving a
+        request on a low-V (young, cool) device genuinely costs less
+        dynamic energy than on an aged device boosted to ``v_max``.
+        """
+        dyn, leak = self.power_split(V, dvth_p_mv, dvth_n_mv)
+        return jnp.asarray(activity) * dyn + leak
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

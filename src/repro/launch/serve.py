@@ -11,6 +11,15 @@ prompt batch is sharded across lanes and
 prefill + scanned-decode generation over every device's BER vector.
 ``--device`` narrows to a single-lane :class:`ServeEngine`; ``--eager``
 selects the per-token oracle loop (bit-exact, one dispatch per token).
+
+``--router`` (default ``round_robin``) first ages the fleet under
+*routed traffic*: the staggered deployment ages fold into the
+:func:`repro.sched.lifetime.cosimulate` scan's initial state, the
+``--workload`` arrival trace is routed each epoch, and the BERs actually
+served reflect the traffic-dependent wear.  ``--router static`` keeps
+the legacy fixed-profile aging; ``wear_level`` demonstrates the
+scheduler actively slowing fleet aging (``python -m
+repro.launch.schedule`` for the router comparison).
 """
 from __future__ import annotations
 
@@ -22,8 +31,12 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.fleet import FleetRuntime
 from repro.data import SyntheticLM
+from repro.sched.router import ROUTER_REGISTRY
+from repro.sched.workload import WORKLOADS
 from repro.serve.engine import FleetServeEngine, ServeEngine
 from repro.train.steps import init_train_state
+
+YEAR_S = 365.25 * 24 * 3600.0
 
 
 def main(argv=None):
@@ -46,6 +59,22 @@ def main(argv=None):
                     help="0 = greedy; >0 samples softmax(logits/T)")
     ap.add_argument("--top-k", type=int, default=None,
                     help="restrict sampling to the k highest logits")
+    ap.add_argument("--router", default="round_robin",
+                    choices=tuple(sorted(ROUTER_REGISTRY)) + ("static",),
+                    help="age the fleet under ROUTED traffic before "
+                         "serving (repro.sched): served BERs then "
+                         "reflect the staggered --age-years wear PLUS "
+                         "--horizon-years of routed service; 'static' "
+                         "keeps the legacy fixed-profile aging")
+    ap.add_argument("--workload", default="diurnal",
+                    choices=sorted(WORKLOADS),
+                    help="request-arrival model fed to --router")
+    ap.add_argument("--utilization", type=float, default=0.55,
+                    help="mean offered load / fleet capacity for "
+                         "--workload")
+    ap.add_argument("--horizon-years", type=float, default=2.0,
+                    help="service horizon the --router traffic spans "
+                         "(on top of the staggered --age-years start)")
     ap.add_argument("--policy", default=None,
                     choices=("fault_tolerant", "baseline", "measured"),
                     help="AVS policy; 'measured' uses THIS arch's curves "
@@ -77,6 +106,19 @@ def main(argv=None):
     for i in range(args.n_devices):
         fleet.set_age(years=args.age_years * (i + 1) / args.n_devices,
                       device=i)
+    if args.router != "static":
+        # traffic-driven aging: fold the staggered ages into the co-sim's
+        # initial state, route --horizon-years of the workload, and serve
+        # at the BERs the traffic-dependent wear admits at end of horizon
+        cos = fleet.apply_load(workload=args.workload, router=args.router,
+                               utilization=args.utilization,
+                               horizon_s=args.horizon_years * YEAR_S)
+        wear = cos.device_wear()[-1]
+        print(f"[serve] routed {args.horizon_years:g}y of "
+              f"{args.workload} traffic ({cos.n_epochs} epochs) via "
+              f"{args.router}: fleet-max ΔVth {wear.max():.1f} mV "
+              f"(spread {wear.max() - wear.min():.1f} mV), mean util "
+              f"{np.asarray(cos.util).mean():.2f}")
 
     fleet_mode = args.n_devices > 1 and args.device is None
     if args.eager and fleet_mode:

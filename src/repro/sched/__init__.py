@@ -1,0 +1,29 @@
+"""Traffic-driven fleet scheduling: wear-leveling request routing.
+
+The scheduler layer turns the paper's stress inputs (duty cycle, toggle
+rate, temperature) into *decisions*: a :class:`~repro.sched.workload.Workload`
+emits per-epoch offered load, a :class:`~repro.sched.router.Router` assigns
+it across the fleet, and :func:`~repro.sched.lifetime.cosimulate` closes
+routing -> stress -> ΔVth -> policy voltage -> power in one jitted scan.
+``FleetRuntime.apply_load`` replays the result into the serving stack so
+served BERs reflect traffic-dependent age; ``python -m
+repro.launch.schedule`` compares routers end to end.
+"""
+from .lifetime import (DEFAULT_EPOCHS, HEAT_PER_UTIL_K, CoSimTrajectory,
+                       compare_routers, cosim_stats, cosimulate,
+                       initial_state_at_ages)
+from .router import (LeastAgedRouter, LeastLoadedRouter, ROUTER_REGISTRY,
+                     RoundRobinRouter, Router, WearLevelRouter, get_router,
+                     register_router, waterfill)
+from .workload import (WORKLOADS, Workload, bursty, diurnal, get_workload,
+                       poisson)
+
+__all__ = [
+    "DEFAULT_EPOCHS", "HEAT_PER_UTIL_K",
+    "CoSimTrajectory", "compare_routers", "cosim_stats", "cosimulate",
+    "initial_state_at_ages",
+    "LeastAgedRouter", "LeastLoadedRouter", "ROUTER_REGISTRY",
+    "RoundRobinRouter", "Router", "WearLevelRouter", "get_router",
+    "register_router", "waterfill",
+    "WORKLOADS", "Workload", "bursty", "diurnal", "get_workload", "poisson",
+]

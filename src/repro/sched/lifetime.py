@@ -1,0 +1,344 @@
+"""Piecewise lifetime co-simulation: traffic drives the aging recursion.
+
+:func:`repro.core.avs.simulate` ages a device under *static* stress — one
+(duty, toggle, T_amb) triple for the whole lifetime.  This module extends
+that scan across scheduling epochs whose stress leaves are *recomputed
+from routed load each epoch*: the router assigns the epoch's offered
+traffic, the assignment scales every device's duty cycle, toggle rate and
+load-induced heating, the six trap populations advance with the same
+history-aware effective-time update (the paper's historical-effect
+recursion, now driven by traffic instead of a fixed profile), and the AVS
+policy boosts each (device, operator-domain) supply against its
+``delay_max`` — all inside ONE jitted ``lax.scan`` per fleet:
+
+    routing -> stress -> ΔVth -> policy voltage -> power,  closed per epoch.
+
+Compiled co-simulations are cached per (router, static shape) —
+``_cosim_fn`` — with the arrival trace, scenario leaves, thresholds and
+initial state entering as traced arguments, so re-routing new traffic
+(or resuming from a different fleet age) re-jits NOTHING.
+``TRACE_COUNTS`` ticks once per trace exactly like
+``repro.serve.steps.TRACE_COUNTS`` and is regression-guarded by
+``tests/test_sched.py`` and ``benchmarks/sched_bench.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aging
+from repro.core.aging import AgingParams
+from repro.core.delay import DelayPolynomial
+from repro.core.scenario import SCENARIO_FIELDS, LifetimeTrajectory, Scenario
+
+from .router import Router, get_router
+from .workload import Workload
+
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# Default scheduling resolution: enough epochs that a 24-epoch diurnal
+# period repeats ~20x over the horizon, cheap enough for CPU CI.
+DEFAULT_EPOCHS = 480
+# Load-induced heating [K] at full utilization (rack-level, on top of the
+# V^2 self-heating the aging model already applies).
+HEAT_PER_UTIL_K = 12.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CoSimTrajectory:
+    """Structured result of :func:`cosimulate`.
+
+    ``E`` epochs x ``N`` devices x ``O`` operator domains; the epoch axis
+    leads (scan layout).  ``as_lifetime_trajectory`` re-lays the series
+    into the fleet's ``(N, O, T)`` convention so a
+    :class:`repro.core.fleet.FleetRuntime` can serve from it.
+    """
+
+    t: jnp.ndarray          # (E,) epoch-end wall-clock [s]
+    load: jnp.ndarray       # (E,) offered load [device-equivalents]
+    util: jnp.ndarray       # (E, N) routed utilization
+    V: jnp.ndarray          # (E, N, O) supply voltage [V]
+    delay: jnp.ndarray      # (E, N, O) critical-path delay [s]
+    dvp: jnp.ndarray        # (E, N, O) PMOS ΔVth [mV]
+    dvn: jnp.ndarray        # (E, N, O) NMOS ΔVth [mV]
+    dv: jnp.ndarray         # (E, N, O, P) per-population shifts [mV]
+
+    _FIELDS = ("t", "load", "util", "V", "delay", "dvp", "dvn", "dv")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_epochs(self) -> int:
+        return int(self.V.shape[0])
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.V.shape[1])
+
+    def device_wear(self) -> np.ndarray:
+        """(E, N) per-device wear signal: ΔVth_p of the worst domain."""
+        return np.asarray(self.dvp).max(axis=-1)
+
+    def as_lifetime_trajectory(self) -> LifetimeTrajectory:
+        """Re-lay to the fleet's ``(N, O, T)`` series convention."""
+        E, N, O = self.V.shape
+        move = lambda x: np.moveaxis(np.asarray(x), 0, 2)
+        return LifetimeTrajectory(
+            t=np.broadcast_to(np.asarray(self.t), (N, O, E)),
+            V=move(self.V), delay=move(self.delay),
+            dvp=move(self.dvp), dvn=move(self.dvn),
+            dv=np.moveaxis(np.asarray(self.dv), 0, 2))
+
+
+# --------------------------------------------------------------------------- #
+# the compiled co-simulation
+# --------------------------------------------------------------------------- #
+def _pop_totals(dv):
+    """Batched :func:`repro.core.aging.totals`: sum the population axis."""
+    pm = jnp.asarray(aging.IS_PMOS, dv.dtype)
+    return jnp.sum(dv * pm, axis=-1), jnp.sum(dv * (1.0 - pm), axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _cosim_fn(router: Router, n_epochs: int, n_devices: int, n_ops: int,
+              max_boosts: int, recovery: bool, avs_enabled: bool):
+    """Jitted co-sim scan for one (router, static shape) bucket.
+
+    Routers are frozen dataclasses (hashable), so each router
+    configuration owns one compiled executable; everything else —
+    arrival trace, scenario leaves, thresholds, heating coefficient,
+    capacity, initial state — is a traced argument.
+    """
+
+    def run(params: AgingParams, poly: DelayPolynomial, scn: Scenario,
+            dmax, loads, epoch_s, capacity, heat, dv0, v0, util0):
+        TRACE_COUNTS["cosim"] += 1
+        duty0 = jnp.broadcast_to(
+            jnp.asarray(scn.duty, jnp.float32), (n_devices,))
+        toggle0 = jnp.broadcast_to(
+            jnp.asarray(scn.toggle, jnp.float32), (n_devices,))
+        t_amb0 = jnp.broadcast_to(
+            jnp.asarray(scn.t_amb, jnp.float32), (n_devices,))
+        t_clk = jnp.broadcast_to(
+            jnp.asarray(scn.t_clk, jnp.float32), (n_devices,))
+        tt = jnp.broadcast_to(
+            jnp.asarray(scn.transition_time, jnp.float32), (n_devices,))
+        v_max = jnp.broadcast_to(
+            jnp.asarray(scn.v_max, jnp.float32), (n_devices,))[:, None]
+        v_step = jnp.broadcast_to(
+            jnp.asarray(scn.v_step, jnp.float32), (n_devices,))[:, None]
+        dmax = jnp.broadcast_to(jnp.asarray(dmax, jnp.float32),
+                                (n_devices, n_ops))
+        epoch_s = jnp.asarray(epoch_s, jnp.float32)
+
+        def epoch_step(carry, load):
+            dv, v, util_prev = carry
+            # duty-cycle feedback: route on the wear the traffic created
+            wear = jnp.max(_pop_totals(dv)[0], axis=-1)          # (N,)
+            util = router.assign(load, wear, util_prev, capacity)
+            # the paper's stress inputs, recomputed from routed load
+            duty = duty0 * util
+            toggle = toggle0 * util
+            t_amb = t_amb0 + heat * util
+            rates = aging.stress_rates(
+                params, duty=duty[:, None], toggle=toggle[:, None],
+                t_clk=t_clk[:, None], transition_time=tt[:, None],
+                recovery=recovery)                               # (N, P)
+            dv = aging.update_state(params, dv, v[..., None],
+                                    rates[:, None, :], epoch_s,
+                                    t_amb[:, None, None])        # (N, O, P)
+            dvp, dvn = _pop_totals(dv)                           # (N, O)
+            delay = poly(dvp * 1e-3, dvn * 1e-3, v)
+
+            if avs_enabled:
+                def boost(_, vd):
+                    v_, d_ = vd
+                    need = (d_ > dmax) & (v_ < v_max - 1e-6)
+                    v_ = v_ + jnp.where(need, v_step, 0.0)
+                    return v_, poly(dvp * 1e-3, dvn * 1e-3, v_)
+
+                v, delay = jax.lax.fori_loop(0, max_boosts, boost,
+                                             (v, delay))
+            return (dv, v, util), {"util": util, "V": v, "delay": delay,
+                                   "dvp": dvp, "dvn": dvn, "dv": dv}
+
+        _, out = jax.lax.scan(epoch_step, (dv0, v0, util0),
+                              jnp.asarray(loads, jnp.float32))
+        return out
+
+    return jax.jit(run)
+
+
+def cosimulate(params: AgingParams, poly: DelayPolynomial,
+               scenario: Scenario, delay_max, loads,
+               router: Router | str = "wear_level", *,
+               n_devices: Optional[int] = None,
+               epoch_s: Optional[float] = None,
+               capacity: float = 1.0,
+               heat_per_util: float = HEAT_PER_UTIL_K,
+               dv0=None, v0=None, util0=None,
+               recovery: bool = True,
+               avs_enabled: bool = True) -> CoSimTrajectory:
+    """Run the traffic-driven lifetime co-simulation for one fleet.
+
+    ``scenario`` holds per-device *full-utilization* stress knobs (scalar
+    leaves broadcast across the fleet; ``(N,)``-batched leaves give a
+    heterogeneous fleet — e.g. a rack thermal gradient in ``t_amb``).
+    ``delay_max`` is the policy threshold array, ``(O,)`` or ``(N, O)``.
+    ``loads`` is the offered-load trace ``(E,)`` (see
+    :mod:`repro.sched.workload`).  ``epoch_s`` defaults to
+    ``scenario.lifetime_s / E`` so the trace spans the scenario horizon.
+    ``dv0 / v0 / util0`` resume the recursion from an existing fleet
+    state (see :meth:`repro.core.fleet.FleetRuntime.apply_load`).
+
+    Returns a :class:`CoSimTrajectory`; ONE jitted scan per
+    (router, shape) — re-routing new traffic re-jits nothing.
+    """
+    router = get_router(router)
+    loads = jnp.asarray(loads, jnp.float32)
+    assert loads.ndim == 1, f"loads must be (E,), got {loads.shape}"
+    dmax = jnp.asarray(delay_max, jnp.float32)
+    sbatch = scenario.batch_shape
+    assert len(sbatch) <= 1, \
+        "cosimulate scenarios must be scalar or (n_devices,)-batched"
+    if n_devices is None:
+        n_devices = (sbatch[0] if sbatch else
+                     (dmax.shape[0] if dmax.ndim == 2 else 1))
+    n_ops = dmax.shape[-1]
+    E = loads.shape[0]
+    if epoch_s is None:
+        epoch_s = float(np.asarray(
+            jnp.mean(jnp.asarray(scenario.lifetime_s, jnp.float32)))) / E
+
+    if dv0 is None:
+        dv0 = jnp.zeros((n_devices, n_ops, aging.N_POP), jnp.float32)
+    if v0 is None:
+        v0 = jnp.broadcast_to(jnp.asarray(scenario.v_init, jnp.float32)
+                              .reshape(-1, 1), (n_devices, n_ops))
+    if util0 is None:
+        util0 = jnp.zeros((n_devices,), jnp.float32)
+
+    fn = _cosim_fn(router, E, n_devices, n_ops,
+                   scenario.max_boosts_per_step, recovery, avs_enabled)
+    out = fn(params, poly, scenario, dmax, loads,
+             jnp.float32(epoch_s), jnp.float32(capacity),
+             jnp.float32(heat_per_util),
+             jnp.asarray(dv0, jnp.float32), jnp.asarray(v0, jnp.float32),
+             jnp.asarray(util0, jnp.float32))
+    t = (np.arange(E, dtype=np.float64) + 1.0) * float(epoch_s)
+    return CoSimTrajectory(t=jnp.asarray(t, jnp.float32), load=loads,
+                           util=out["util"], V=out["V"],
+                           delay=out["delay"], dvp=out["dvp"],
+                           dvn=out["dvn"], dv=out["dv"])
+
+
+# --------------------------------------------------------------------------- #
+# pre-aged fleet state (staggered deployments)
+# --------------------------------------------------------------------------- #
+def initial_state_at_ages(params: AgingParams, poly: DelayPolynomial,
+                          scenario: Scenario, delay_max, ages_s):
+    """Per-device ``(dv0, v0)`` after ``ages_s`` of static-stress service.
+
+    Runs the classic :func:`repro.core.avs.simulate` scan for the
+    scenario (one vmapped call; scalar scenarios broadcast across the
+    fleet) and gathers each device's trap-population state and supply at
+    its age — the state a *staggered deployment* hands the traffic
+    co-simulation to resume from.  Vectorised gathers, no loop over
+    devices.
+    """
+    from repro.core.avs import simulate
+    traj = simulate(params, poly, scenario.expand_dims(-1),
+                    delay_max=jnp.asarray(delay_max, jnp.float32))
+    t, dv, V = (np.asarray(traj.t), np.asarray(traj.dv), np.asarray(traj.V))
+    ages = np.atleast_1d(np.asarray(ages_s, np.float64))
+    n = ages.shape[0]
+    if t.ndim == 2:                       # scalar scenario: (O, T) series
+        t = np.broadcast_to(t, (n,) + t.shape)
+        V = np.broadcast_to(V, (n,) + V.shape)
+        dv = np.broadcast_to(dv, (n,) + dv.shape)
+    idx = np.clip((t < ages[:, None, None]).sum(-1), 0, t.shape[-1] - 1)
+    v0 = np.take_along_axis(V, idx[..., None], axis=-1)[..., 0]
+    dv0 = np.take_along_axis(dv, idx[..., None, None], axis=-2)[..., 0, :]
+    return (jnp.asarray(dv0, jnp.float32), jnp.asarray(v0, jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+# summary statistics + router comparison
+# --------------------------------------------------------------------------- #
+def cosim_stats(power_model, cos: CoSimTrajectory) -> Dict[str, Any]:
+    """Fleet-level lifetime summary of one co-simulation.
+
+    Epochs are uniform, so lifetime averages are plain means over the
+    epoch axis.  ``p_avg_w`` is the lifetime-average TOTAL fleet array
+    power, activity-scaled (:meth:`repro.core.power.PowerModel.
+    power_at_activity` — dynamic power follows the routed duty, leakage
+    burns regardless); ``fleet_max_dvp_mv`` is the headline wear number
+    (worst device, worst domain, end of life) the wear-leveling router
+    is built to minimise.
+    """
+    wear = cos.device_wear()                      # (E, N)
+    p = np.asarray(power_model.power_at_activity(
+        cos.V, cos.dvp, cos.dvn, np.asarray(cos.util)[..., None]),
+        np.float64)
+    load = np.asarray(cos.load, np.float64)
+    served = np.asarray(cos.util, np.float64).sum(axis=-1)
+    return {
+        "fleet_max_dvp_mv": float(wear[-1].max()),
+        "fleet_mean_dvp_mv": float(wear[-1].mean()),
+        "wear_spread_mv": float(wear[-1].max() - wear[-1].min()),
+        "p_avg_w": float(p.mean(axis=0).sum()),
+        "v_final_max": float(np.asarray(cos.V)[-1].max()),
+        "served_frac": float(served.sum() / max(load.sum(), 1e-12)),
+        "util_mean": float(np.asarray(cos.util).mean()),
+    }
+
+
+def compare_routers(cal, scenario: Scenario, policy, loads, *,
+                    routers=("round_robin", "least_loaded", "least_aged",
+                             "wear_level"),
+                    operators=None, n_devices: Optional[int] = None,
+                    epoch_s: Optional[float] = None,
+                    heat_per_util: float = HEAT_PER_UTIL_K,
+                    ages_s=None, dv0=None, v0=None,
+                    capacity: float = 1.0) -> Dict[str, Dict[str, Any]]:
+    """Co-simulate the same fleet + traffic under each router.
+
+    ``cal`` is a :class:`repro.core.artifacts.Calibration`; the policy's
+    per-operator ``delay_max`` thresholds are evaluated once on the
+    (possibly per-device) scenario and shared across routers, so the
+    comparison isolates the routing decision.  ``ages_s`` pre-ages the
+    fleet (staggered deployment) via :func:`initial_state_at_ages`;
+    explicit ``dv0 / v0`` override it.  Returns
+    ``{router_name: cosim_stats + trajectory}``.
+    """
+    from repro.core.resilience import OPERATORS
+    ops = tuple(operators or OPERATORS)
+    dmax = policy.thresholds(scenario, ops)
+    if ages_s is not None and dv0 is None:
+        ages_s = np.atleast_1d(np.asarray(ages_s, np.float64))
+        if n_devices is None and not scenario.batch_shape:
+            n_devices = ages_s.shape[0]
+        dv0, v0 = initial_state_at_ages(cal.aging, cal.delay_poly,
+                                        scenario, dmax, ages_s)
+    out: Dict[str, Dict[str, Any]] = {}
+    for name in routers:
+        cos = cosimulate(cal.aging, cal.delay_poly, scenario, dmax, loads,
+                         router=name, n_devices=n_devices, epoch_s=epoch_s,
+                         heat_per_util=heat_per_util, dv0=dv0, v0=v0,
+                         capacity=capacity)
+        out[name] = dict(cosim_stats(cal.power, cos), traj=cos)
+    return out

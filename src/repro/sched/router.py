@@ -1,0 +1,194 @@
+"""Routing policies: who serves this epoch's traffic — a wear lever.
+
+A router maps one epoch's offered load (a scalar, in device-equivalents)
+plus the fleet's current per-device state onto a per-device utilization
+vector — the fraction of the epoch each device spends serving.  That
+vector is exactly the stress input of the aging model (duty cycle, toggle
+rate and load-induced heating all scale with it), so the router is the
+one aging knob a production operator actually holds: DNN-Life frames
+wear-leveling as a first-class aging mitigation, and the co-simulation in
+:mod:`repro.sched.lifetime` closes the loop routing -> stress -> ΔVth ->
+policy voltage -> power inside one scan.
+
+The protocol is a single traced method, mirroring
+:class:`repro.core.policy.Policy`::
+
+    assign(load, wear, util_prev, capacity) -> jnp.ndarray (N,)
+
+with ``load`` a traced scalar, ``wear`` the per-device aging signal
+(ΔVth_p in mV, worst operator domain), ``util_prev`` the previous epoch's
+assignment and ``capacity`` the per-device utilization ceiling.  Every
+implementation is a vectorised assignment over the device axis (sorts,
+clips and a fixed-iteration waterfill bisection — no Python loop over
+requests or devices), so the co-simulation can vmap/scan it freely.
+Routers are frozen dataclasses: hashable, so a compiled co-simulation is
+cached per router configuration.
+
+Registered routers (``register_router`` / ``get_router``):
+
+* ``round_robin``  — uniform spread, aging-blind (the baseline);
+* ``least_loaded`` — waterfill on the previous epoch's utilization
+  (queue-balancing; equals round_robin under stationary traffic);
+* ``least_aged``   — greedy: fill the least-worn devices to capacity
+  first (maximal steering, at the cost of slamming young devices);
+* ``wear_level``   — waterfill on the wear signal itself: devices below
+  the fleet's wear level absorb proportionally more traffic until the
+  fleet converges to a common ΔVth (minimises fleet-max ΔVth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Router(Protocol):
+    """Anything that maps (load, fleet state) to per-device utilization."""
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        """Per-device utilization for this epoch, shape ``(N,)``."""
+        ...
+
+
+ROUTER_REGISTRY: Dict[str, type] = {}
+
+
+def register_router(cls):
+    """Class decorator: register a router under its ``name`` attribute."""
+    ROUTER_REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_router(name_or_router, **kw) -> "Router":
+    """Resolve a registered router by name (instances pass through)."""
+    if not isinstance(name_or_router, str):
+        return name_or_router
+    try:
+        return ROUTER_REGISTRY[name_or_router](**kw)
+    except KeyError:
+        raise KeyError(f"unknown router {name_or_router!r}; registered: "
+                       f"{sorted(ROUTER_REGISTRY)}") from None
+
+
+# --------------------------------------------------------------------------- #
+# shared vectorised primitives
+# --------------------------------------------------------------------------- #
+def _servable(load, n, capacity):
+    """Load the fleet can actually serve this epoch (the rest is dropped)."""
+    cap = jnp.broadcast_to(jnp.asarray(capacity, jnp.float32), (n,))
+    return jnp.minimum(jnp.asarray(load, jnp.float32), cap.sum()), cap
+
+
+def waterfill(levels, load, capacity, *, gain=1.0, n_iter: int = 40
+              ) -> jnp.ndarray:
+    """Allocate ``load`` by flooding the lowest ``levels`` first.
+
+    Solves for the water level ``lam`` such that
+
+        u_i = clip((lam - levels_i) * gain, 0, capacity_i),   sum_i u_i = load
+
+    by fixed-iteration bisection (traceable; ``n_iter=40`` resolves the
+    level to ~1e-12 of the search interval).  Devices below the water
+    line receive allocation proportional to their headroom — the
+    continuous form of "send the next request to the lowest-level
+    device".  With identical levels it degenerates to a uniform split.
+    """
+    levels = jnp.asarray(levels, jnp.float32)
+    load, cap = _servable(load, levels.shape[0], capacity)
+    gain = jnp.asarray(gain, jnp.float32)
+    lo = jnp.min(levels)
+    hi = jnp.max(levels) + jnp.max(cap) / jnp.maximum(gain, 1e-9)
+
+    def body(_, bounds):
+        lo_, hi_ = bounds
+        mid = 0.5 * (lo_ + hi_)
+        tot = jnp.sum(jnp.clip((mid - levels) * gain, 0.0, cap))
+        under = tot < load
+        return jnp.where(under, mid, lo_), jnp.where(under, hi_, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    u = jnp.clip((0.5 * (lo + hi) - levels) * gain, 0.0, cap)
+    # bisection leaves an O(interval / 2^n_iter) residual; the power-law
+    # aging kinetics amplify any nonzero stress time, so zero load must
+    # yield EXACTLY zero utilization
+    return jnp.where(load > 0.0, u, 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# registered routers
+# --------------------------------------------------------------------------- #
+@register_router
+@dataclasses.dataclass(frozen=True)
+class RoundRobinRouter:
+    """Uniform spread: every device gets ``load / N`` — aging-blind.
+
+    The continuum limit of dealing request quanta cyclically; the
+    baseline every aging-aware router is compared against.
+    """
+    name = "round_robin"
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        # waterfill on flat levels == uniform split, with overflow from
+        # capacity-saturated devices redistributed to the rest (keeps the
+        # conservation contract under heterogeneous per-device capacity)
+        return waterfill(jnp.zeros_like(wear), load, capacity)
+
+
+@register_router
+@dataclasses.dataclass(frozen=True)
+class LeastLoadedRouter:
+    """Waterfill on the previous epoch's utilization (queue balancing).
+
+    Smooths bursty arrival noise across epochs; blind to aging, so under
+    stationary traffic it converges to the round-robin split.
+    """
+    name = "least_loaded"
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        return waterfill(util_prev, load, capacity)
+
+
+@register_router
+@dataclasses.dataclass(frozen=True)
+class LeastAgedRouter:
+    """Greedy on ΔVth: fill the least-worn devices to capacity first.
+
+    Maximal steering away from aged silicon — the freshest device is
+    slammed to ``capacity`` before the next one sees a request.  Strong
+    on fleet-max wear but concentrates stress on the young tail (the
+    pathology :class:`WearLevelRouter` avoids).
+    """
+    name = "least_aged"
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        load, cap = _servable(load, wear.shape[0], capacity)
+        order = jnp.argsort(wear)                      # least aged first
+        cap_sorted = cap[order]
+        # capacity consumed by all strictly-less-aged devices
+        before_sorted = jnp.cumsum(cap_sorted) - cap_sorted
+        before = before_sorted[jnp.argsort(order)]
+        return jnp.clip(load - before, 0.0, cap)
+
+
+@register_router
+@dataclasses.dataclass(frozen=True)
+class WearLevelRouter:
+    """Minimise fleet-max ΔVth: waterfill on the wear signal itself.
+
+    Devices below the fleet's wear level receive proportionally more
+    traffic (``gain`` utilization per normalised-wear unit of headroom),
+    so the closed loop routing -> stress -> ΔVth keeps pulling the fleet
+    toward a common wear level each epoch — duty-cycle feedback into the
+    aging scan.  On a fresh homogeneous fleet (zero wear spread) it
+    degenerates to the uniform split.
+    """
+    name = "wear_level"
+    gain: float = 4.0           # steering aggressiveness
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        spread = jnp.maximum(jnp.max(wear) - jnp.min(wear), 1e-6)
+        levels = (wear - jnp.min(wear)) / spread       # [0, 1]
+        return waterfill(levels, load, capacity, gain=self.gain)

@@ -1,0 +1,161 @@
+"""Synthetic request-arrival models — traffic as an array program.
+
+A :class:`Workload` describes how much inference traffic the fleet is
+offered per scheduling epoch, as a pytree whose leaves (mean load, diurnal
+modulation depth/period, burst probability/gain, Poisson granularity) may
+carry broadcastable batch dimensions exactly like
+:class:`repro.core.scenario.Scenario` leaves.  :meth:`Workload.loads`
+compiles the whole arrival trace — diurnal envelope, Poisson counting
+noise, flash-crowd bursts — as one vectorised program over the epoch grid
+(``jnp.arange``-driven; no Python loop over epochs or requests), so a
+batch of workloads emits a batch of traces from one trace/compile.
+
+Units: offered load is measured in *device-equivalents* — ``load == 1.0``
+keeps exactly one device busy for the whole epoch, ``load == N`` saturates
+an N-device fleet.  The router (not the workload) decides what happens
+above fleet capacity.
+
+Three registered shapes cover the serving-traffic regimes the scheduler
+cares about:
+
+* ``poisson``  — stationary mean with Poisson counting noise (steady API
+  traffic);
+* ``diurnal``  — sinusoidal day/night envelope on top of the Poisson
+  noise (consumer traffic; the shape the wear-leveling acceptance test
+  and ``repro.launch.schedule`` default to);
+* ``bursty``   — Poisson base plus Bernoulli flash crowds that multiply
+  the epoch's load (launch-day spikes).
+
+``get_workload(name, n_devices=N)`` resolves a registered shape with its
+mean pre-scaled to the fleet size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Leaf fields, in pytree order.  Everything here may be batched / traced.
+WORKLOAD_FIELDS = ("mean_load", "amplitude", "period", "phase",
+                   "burst_prob", "burst_gain", "quanta")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One request-arrival process (or a broadcastable batch of them)."""
+
+    mean_load: Any = 4.0       # mean offered load [device-equivalents]
+    amplitude: Any = 0.0       # diurnal modulation depth (0 = flat)
+    period: Any = 24.0         # diurnal period [epochs]
+    phase: Any = 0.0           # phase offset [epochs]
+    burst_prob: Any = 0.0      # per-epoch flash-crowd probability
+    burst_gain: Any = 3.0      # load multiplier inside a burst epoch
+    quanta: Any = 64.0         # requests per device-epoch (Poisson grain)
+    # --- static (aux) structure -------------------------------------------
+    n_epochs: int = 480        # length of the emitted trace
+    kind: str = "poisson"      # registry label (provenance only)
+
+    # ------------------------------------------------------------------ #
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in WORKLOAD_FIELDS),
+                (self.n_epochs, self.kind))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_epochs=aux[0], kind=aux[1])
+
+    @property
+    def batch_shape(self) -> tuple:
+        return jnp.broadcast_shapes(
+            *(jnp.shape(getattr(self, f)) for f in WORKLOAD_FIELDS))
+
+    def replace(self, **kw) -> "Workload":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------ #
+    def envelope(self) -> jnp.ndarray:
+        """Deterministic mean-load trace, shape ``batch_shape + (E,)``."""
+        e = jnp.arange(self.n_epochs, dtype=jnp.float32)
+        mean = jnp.asarray(self.mean_load, jnp.float32)[..., None]
+        amp = jnp.asarray(self.amplitude, jnp.float32)[..., None]
+        period = jnp.asarray(self.period, jnp.float32)[..., None]
+        phase = jnp.asarray(self.phase, jnp.float32)[..., None]
+        day = 1.0 + amp * jnp.sin(2.0 * jnp.pi * (e + phase) / period)
+        return mean * jnp.maximum(day, 0.0)
+
+    def loads(self, key=None) -> jnp.ndarray:
+        """Sample the offered-load trace, shape ``batch_shape + (E,)``.
+
+        The envelope is quantised into Poisson request counts at ``quanta``
+        requests per device-epoch (so relative noise shrinks as traffic
+        grows, like real arrival counts), then flash-crowd epochs multiply
+        their load by ``burst_gain``.  ``key=None`` (or an int seed)
+        selects a deterministic stream — two calls with the same key are
+        bit-identical, which the co-simulation caching relies on.
+        """
+        if key is None or isinstance(key, int):
+            key = jax.random.PRNGKey(0 if key is None else key)
+        k_noise, k_burst = jax.random.split(key)
+        env = self.envelope()
+        q = jnp.asarray(self.quanta, jnp.float32)[..., None]
+        counts = jax.random.poisson(k_noise, env * q, shape=env.shape)
+        load = counts.astype(jnp.float32) / q
+        p = jnp.asarray(self.burst_prob, jnp.float32)[..., None]
+        gain = jnp.asarray(self.burst_gain, jnp.float32)[..., None]
+        burst = jax.random.bernoulli(
+            k_burst, jnp.broadcast_to(p, env.shape))
+        return jnp.where(burst, load * gain, load)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {f: np.asarray(getattr(self, f)).tolist()
+             for f in WORKLOAD_FIELDS}
+        d.update(n_epochs=self.n_epochs, kind=self.kind)
+        return d
+
+
+# --------------------------------------------------------------------------- #
+# registry of named traffic shapes
+# --------------------------------------------------------------------------- #
+def poisson(mean_load: float = 4.0, **kw) -> Workload:
+    """Stationary Poisson traffic at ``mean_load`` device-equivalents."""
+    return Workload(mean_load=mean_load, amplitude=0.0, burst_prob=0.0,
+                    kind="poisson", **kw)
+
+
+def diurnal(mean_load: float = 4.0, amplitude: float = 0.6,
+            period: float = 24.0, **kw) -> Workload:
+    """Day/night sinusoid (depth ``amplitude``) on Poisson noise."""
+    return Workload(mean_load=mean_load, amplitude=amplitude, period=period,
+                    burst_prob=0.0, kind="diurnal", **kw)
+
+
+def bursty(mean_load: float = 3.0, burst_prob: float = 0.05,
+           burst_gain: float = 3.0, **kw) -> Workload:
+    """Poisson base plus Bernoulli flash crowds multiplying the epoch."""
+    return Workload(mean_load=mean_load, amplitude=0.0,
+                    burst_prob=burst_prob, burst_gain=burst_gain,
+                    kind="bursty", **kw)
+
+
+WORKLOADS = {"poisson": poisson, "diurnal": diurnal, "bursty": bursty}
+
+
+def get_workload(name: str, *, n_devices: int = 1, utilization: float = 0.5,
+                 **kw) -> Workload:
+    """Named workload with its mean sized for an ``n_devices`` fleet.
+
+    ``utilization`` is the fleet-average duty the traffic should impose
+    (``mean_load = utilization * n_devices``); an explicit ``mean_load``
+    kwarg overrides it.
+    """
+    try:
+        factory = WORKLOADS[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; registered: "
+                       f"{sorted(WORKLOADS)}") from None
+    kw.setdefault("mean_load", utilization * n_devices)
+    return factory(**kw)

@@ -266,7 +266,18 @@ class FleetServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, fleet: FleetRuntime, *,
                  max_len: int = 512, use_systolic_kernel: bool = False,
-                 use_fused_kernel: bool = True, seed: int = 0):
+                 use_fused_kernel: bool = True, seed: int = 0,
+                 router=None, workload="diurnal", loads=None,
+                 apply_load_kw=None):
+        """``router`` (a name from ``repro.sched.router.ROUTER_REGISTRY``
+        or a Router instance) ages the fleet under routed traffic before
+        serving: the served per-lane BERs then reflect *traffic-dependent*
+        age rather than the static mission profile.  ``workload`` /
+        ``loads`` select the arrival trace and ``apply_load_kw`` passes
+        any further knobs (``utilization``, ``n_epochs``, ``horizon_s``,
+        ``capacity``, ``key``, ...) through to
+        :meth:`repro.core.fleet.FleetRuntime.apply_load`, which this
+        forwards to."""
         self.cfg = cfg
         self.params = params
         self.fleet = fleet
@@ -274,6 +285,9 @@ class FleetServeEngine:
         self.use_kernel = use_systolic_kernel
         self.use_fused = use_fused_kernel
         self._key = jax.random.PRNGKey(seed)
+        if router is not None:
+            fleet.apply_load(loads=loads, workload=workload, router=router,
+                             **(apply_load_kw or {}))
 
     @property
     def n_devices(self) -> int:

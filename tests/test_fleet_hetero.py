@@ -1,0 +1,99 @@
+"""Heterogeneous-fleet regression: per-device ``set_age``/``advance``,
+mixed-age snapshots and ``op_ber_array`` consistency — the fleet state
+machinery the traffic scheduler routes on."""
+import numpy as np
+import pytest
+
+from repro.core.fleet import SECONDS_PER_YEAR, FleetRuntime
+from repro.core.resilience import OPERATORS
+
+MIXED_YEARS = (0.5, 9.5, 2.0, 6.0, 4.0)
+
+
+@pytest.fixture()
+def fleet():
+    return FleetRuntime(n_devices=len(MIXED_YEARS),
+                        policy="fault_tolerant")
+
+
+def test_mixed_set_age_reflected_in_ages_years(fleet):
+    for i, years in enumerate(MIXED_YEARS):
+        fleet.set_age(years=years, device=i)
+    np.testing.assert_allclose(fleet.ages_years, MIXED_YEARS, rtol=1e-12)
+    # fleet-wide set_age overwrites every device
+    fleet.set_age(years=3.0)
+    np.testing.assert_allclose(fleet.ages_years, 3.0)
+    # seconds= and years= agree
+    fleet.set_age(seconds=2.5 * SECONDS_PER_YEAR, device=1)
+    assert fleet.ages_years[1] == pytest.approx(2.5)
+    assert fleet.ages_years[0] == pytest.approx(3.0)
+
+
+def test_mixed_advance_per_device_and_fleet_wide(fleet):
+    for i, years in enumerate(MIXED_YEARS):
+        fleet.set_age(years=years, device=i)
+    fleet.advance(SECONDS_PER_YEAR, device=2)
+    want = np.asarray(MIXED_YEARS, np.float64)
+    want[2] += 1.0
+    np.testing.assert_allclose(fleet.ages_years, want, rtol=1e-12)
+    fleet.advance(0.5 * SECONDS_PER_YEAR)          # whole fleet
+    np.testing.assert_allclose(fleet.ages_years, want + 0.5, rtol=1e-12)
+    # vector advance: one value per device
+    fleet.advance(np.arange(len(MIXED_YEARS)) * SECONDS_PER_YEAR)
+    np.testing.assert_allclose(
+        fleet.ages_years, want + 0.5 + np.arange(len(MIXED_YEARS)),
+        rtol=1e-12)
+
+
+def test_mixed_age_snapshot_matches_per_device_reference(fleet):
+    """A mixed-age snapshot must equal, device by device, the snapshot of
+    a uniform fleet pinned at that device's age (round-trip through the
+    shared vmapped trajectories)."""
+    for i, years in enumerate(MIXED_YEARS):
+        fleet.set_age(years=years, device=i)
+    snap = fleet.snapshot()
+    ref = FleetRuntime(n_devices=1, policy="fault_tolerant")
+    for i, years in enumerate(MIXED_YEARS):
+        ref.set_age(years=years)
+        rsnap = ref.snapshot()
+        for f in ("v_dd", "delay", "dvth_p_mv", "dvth_n_mv", "ber",
+                  "power_w"):
+            np.testing.assert_allclose(
+                getattr(snap, f)[i], getattr(rsnap, f)[0],
+                rtol=1e-6, err_msg=f"{f} device {i} @ {years}y")
+
+
+def test_snapshot_cache_invalidation_round_trip(fleet):
+    fleet.set_age(years=5.0)
+    a = fleet.snapshot()
+    assert fleet.snapshot() is a                   # cached between changes
+    fleet.advance(SECONDS_PER_YEAR, device=0)
+    b = fleet.snapshot()
+    assert b is not a
+    assert (b.dvth_p_mv[0] > a.dvth_p_mv[0]).all()
+    np.testing.assert_allclose(b.dvth_p_mv[1:], a.dvth_p_mv[1:])
+    # setting the same ages again reproduces the identical state
+    fleet.set_age(years=5.0)
+    fleet.advance(SECONDS_PER_YEAR, device=0)
+    c = fleet.snapshot()
+    for f in ("v_dd", "delay", "dvth_p_mv", "dvth_n_mv", "ber", "power_w"):
+        np.testing.assert_array_equal(getattr(c, f), getattr(b, f))
+
+
+def test_op_ber_array_consistent_with_scalar_accessors(fleet):
+    for i, years in enumerate(MIXED_YEARS):
+        fleet.set_age(years=years, device=i)
+    arr = fleet.op_ber_array()
+    assert arr.shape == (len(MIXED_YEARS), len(OPERATORS))
+    for i in range(fleet.n_devices):
+        bers = fleet.op_bers(device=i)
+        for j, op in enumerate(fleet.operators):
+            assert arr[i, j] == pytest.approx(bers[op], rel=1e-12)
+            assert arr[i, j] == pytest.approx(fleet.op_ber(op, device=i),
+                                              rel=1e-12)
+        view = fleet.device(i)
+        assert view.op_bers() == bers
+    # older devices never admit a lower worst-domain BER
+    order = np.argsort(MIXED_YEARS)
+    worst = arr.max(axis=1)
+    assert (np.diff(worst[order]) >= -1e-30).all()

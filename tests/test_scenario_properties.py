@@ -1,0 +1,102 @@
+"""Hypothesis property tests for Scenario batch mechanics.
+
+The traffic scheduler reshapes/broadcasts scenario batches per epoch
+(``repro.sched.lifetime`` broadcasts per-device leaves; ``FleetRuntime``
+indexes them), so the ``broadcast_leaves`` / ``reshape`` /
+``__getitem__`` invariants are load-bearing.  Runs under real
+``hypothesis`` when installed (the ``[test]`` extra) and under the
+deterministic in-repo fallback otherwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scenario import SCENARIO_FIELDS, Scenario, scenario_grid
+
+_dim = st.integers(min_value=1, max_value=4)
+_field = st.sampled_from(SCENARIO_FIELDS)
+
+
+def _grid(b1: int, b2: int, f1: str, f2: str) -> Scenario:
+    """A 2-axis scenario grid over two (possibly equal) swept fields."""
+    if f1 == f2:
+        f2 = SCENARIO_FIELDS[(SCENARIO_FIELDS.index(f1) + 1)
+                             % len(SCENARIO_FIELDS)]
+    return scenario_grid(**{f1: np.linspace(0.1, 0.9, b1),
+                            f2: np.linspace(1.0, 2.0, b2)})
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=_dim, b2=_dim, f1=_field, f2=_field)
+def test_broadcast_leaves_materialises_batch_shape(b1, b2, f1, f2):
+    scn = _grid(b1, b2, f1, f2)
+    assert scn.batch_shape == (b1, b2)
+    mat = scn.broadcast_leaves()
+    for f in SCENARIO_FIELDS:
+        assert jnp.shape(getattr(mat, f)) == (b1, b2), f
+        # broadcasting must not change any cell's value
+        np.testing.assert_allclose(
+            np.asarray(getattr(mat, f)),
+            np.broadcast_to(np.asarray(getattr(scn, f),
+                                       np.float32), (b1, b2)),
+            rtol=1e-7, err_msg=f)
+    # static aux survives
+    assert mat.n_steps == scn.n_steps
+    assert mat.max_boosts_per_step == scn.max_boosts_per_step
+    # idempotent
+    again = mat.broadcast_leaves()
+    for f in SCENARIO_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(again, f)),
+                                      np.asarray(getattr(mat, f)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=_dim, b2=_dim, f1=_field, f2=_field)
+def test_reshape_round_trip(b1, b2, f1, f2):
+    scn = _grid(b1, b2, f1, f2)
+    flat = scn.reshape((b1 * b2,))
+    assert flat.batch_shape == (b1 * b2,)
+    back = flat.reshape((b1, b2))
+    mat = scn.broadcast_leaves()
+    for f in SCENARIO_FIELDS:
+        np.testing.assert_allclose(np.asarray(getattr(back, f)),
+                                   np.asarray(getattr(mat, f)),
+                                   rtol=1e-7, err_msg=f)
+    # row-major flattening order (what simulate()'s vmap relies on)
+    for f in SCENARIO_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(flat, f)),
+            np.asarray(getattr(mat, f)).reshape(-1), err_msg=f)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=_dim, b2=_dim, i=st.integers(min_value=0, max_value=99),
+       j=st.integers(min_value=0, max_value=99), f1=_field, f2=_field)
+def test_getitem_matches_broadcast_cell(b1, b2, i, j, f1, f2):
+    scn = _grid(b1, b2, f1, f2)
+    i, j = i % b1, j % b2
+    cell = scn[i, j]
+    assert cell.batch_shape == ()
+    mat = scn.broadcast_leaves()
+    for f in SCENARIO_FIELDS:
+        assert float(np.asarray(getattr(cell, f))) == float(
+            np.asarray(getattr(mat, f))[i, j]), f
+    # a row index keeps the trailing axis
+    row = scn[i]
+    assert row.batch_shape == (b2,)
+    for f in SCENARIO_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(row, f)),
+                                      np.asarray(getattr(mat, f))[i],
+                                      err_msg=f)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=_dim, f=_field)
+def test_expand_dims_then_index_recovers_vector(b, f):
+    scn = Scenario.nominal(**{f: jnp.linspace(0.2, 0.8, b)})
+    wide = scn.expand_dims(-1)
+    assert wide.batch_shape == (b, 1)
+    back = wide[:, 0]
+    np.testing.assert_allclose(np.asarray(getattr(back, f)),
+                               np.asarray(getattr(scn, f)), rtol=1e-7)

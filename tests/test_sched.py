@@ -1,0 +1,403 @@
+"""Traffic-driven fleet scheduler: workloads, routers, the lifetime
+co-simulation, and the wear-leveling acceptance criterion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.artifacts import load_calibration
+from repro.core.constants import T_AMB
+from repro.core.fleet import FleetRuntime
+from repro.core.policy import FaultTolerantPolicy
+from repro.core.resilience import OPERATORS
+from repro.core.scenario import Scenario
+from repro.sched import (compare_routers, cosim_stats, cosimulate,
+                         get_router, get_workload)
+from repro.sched import lifetime as sched_lifetime
+from repro.sched.router import ROUTER_REGISTRY, register_router, waterfill
+from repro.sched.workload import WORKLOADS, Workload
+
+YEAR_S = 365.25 * 24 * 3600.0
+N_DEV = 8
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+@pytest.fixture(scope="module")
+def policy(cal):
+    return FaultTolerantPolicy(ber_model=cal.ber)
+
+
+def het_scenario(cal, n=N_DEV, t_spread=30.0, horizon_years=5.0):
+    """Rack thermal gradient across the fleet, reduced horizon."""
+    scn = Scenario.from_lifetime_config(cal.lifetime_cfg).replace(
+        lifetime_s=horizon_years * YEAR_S)
+    if t_spread:
+        scn = scn.replace(t_amb=jnp.asarray(
+            T_AMB + np.linspace(0.0, t_spread, n), jnp.float32))
+    return scn
+
+
+# --------------------------------------------------------------------------- #
+# workloads
+# --------------------------------------------------------------------------- #
+def test_workload_shapes_and_determinism():
+    for name in WORKLOADS:
+        wl = get_workload(name, n_devices=4, utilization=0.5, n_epochs=96)
+        loads = wl.loads(3)
+        assert loads.shape == (96,)
+        assert np.isfinite(np.asarray(loads)).all()
+        assert (np.asarray(loads) >= 0).all()
+        np.testing.assert_array_equal(np.asarray(loads),
+                                      np.asarray(wl.loads(3)))
+        assert not np.array_equal(np.asarray(loads),
+                                  np.asarray(wl.loads(4)))
+
+
+def test_workload_mean_tracks_utilization():
+    wl = get_workload("poisson", n_devices=8, utilization=0.5,
+                      n_epochs=2048)
+    assert float(jnp.mean(wl.loads(0))) == pytest.approx(4.0, rel=0.05)
+
+
+def test_diurnal_modulation_visible():
+    wl = get_workload("diurnal", n_devices=4, utilization=0.5,
+                      n_epochs=240, quanta=1e4)
+    loads = np.asarray(wl.loads(0)).reshape(-1, 24)   # fold onto the day
+    daily = loads.mean(axis=0)
+    assert daily.max() > 1.3 * daily.min()            # day/night swing
+
+
+def test_bursty_has_flash_crowds():
+    wl = get_workload("bursty", n_devices=4, utilization=0.4, n_epochs=480,
+                      burst_prob=0.05, burst_gain=3.0, quanta=1e4)
+    loads = np.asarray(wl.loads(0))
+    assert loads.max() > 2.0 * np.median(loads)
+
+
+def test_workload_batches_like_scenario():
+    wl = Workload(mean_load=jnp.asarray([2.0, 4.0]), n_epochs=64)
+    assert wl.batch_shape == (2,)
+    loads = wl.loads(0)
+    assert loads.shape == (2, 64)
+    assert float(loads[1].mean()) > float(loads[0].mean())
+
+
+# --------------------------------------------------------------------------- #
+# routers
+# --------------------------------------------------------------------------- #
+def _router_inputs(n=6):
+    wear = jnp.asarray(np.linspace(10.0, 60.0, n), jnp.float32)
+    util_prev = jnp.zeros((n,), jnp.float32)
+    return wear, util_prev
+
+
+@pytest.mark.parametrize("name", sorted(ROUTER_REGISTRY))
+def test_router_conserves_servable_load(name):
+    router = get_router(name)
+    wear, util_prev = _router_inputs()
+    for load in (0.0, 0.7, 3.2, 6.0, 9.5):          # incl. overload
+        u = np.asarray(router.assign(jnp.float32(load), wear, util_prev))
+        assert (u >= -1e-6).all() and (u <= 1.0 + 1e-6).all(), (name, load)
+        assert u.sum() == pytest.approx(min(load, 6.0), abs=2e-3), \
+            (name, load)
+
+
+@pytest.mark.parametrize("name", sorted(ROUTER_REGISTRY))
+def test_router_conserves_under_heterogeneous_capacity(name):
+    """Saturating a small-capacity device must redistribute its overflow,
+    not drop it — for EVERY router (round_robin included)."""
+    router = get_router(name)
+    wear, util_prev = _router_inputs(4)
+    cap = jnp.asarray([0.25, 1.0, 1.0, 0.5], jnp.float32)
+    for load in (0.6, 2.0, 2.75, 4.0):              # incl. overload
+        u = np.asarray(router.assign(jnp.float32(load), wear[:4],
+                                     util_prev[:4], cap))
+        assert (u <= np.asarray(cap) + 1e-5).all(), (name, load)
+        assert u.sum() == pytest.approx(min(load, 2.75), abs=2e-3), \
+            (name, load)
+
+
+def test_round_robin_is_uniform():
+    router = get_router("round_robin")
+    wear, util_prev = _router_inputs()
+    u = np.asarray(router.assign(jnp.float32(3.0), wear, util_prev))
+    np.testing.assert_allclose(u, 0.5, atol=1e-6)
+
+
+def test_least_aged_fills_least_worn_first():
+    router = get_router("least_aged")
+    wear, util_prev = _router_inputs()
+    u = np.asarray(router.assign(jnp.float32(2.5), wear, util_prev))
+    # devices 0,1 (least aged) saturated, 2 partial, rest idle
+    np.testing.assert_allclose(u[:2], 1.0, atol=1e-5)
+    assert u[2] == pytest.approx(0.5, abs=1e-5)
+    np.testing.assert_allclose(u[3:], 0.0, atol=1e-5)
+
+
+def test_wear_level_steers_toward_less_worn():
+    router = get_router("wear_level")
+    wear, util_prev = _router_inputs()
+    u = np.asarray(router.assign(jnp.float32(3.0), wear, util_prev))
+    assert (np.diff(u) <= 1e-6).all()               # monotone in wear
+    assert u[0] > u[-1] + 0.05                      # actually steering
+    # zero wear spread degenerates to the uniform split
+    u0 = np.asarray(router.assign(jnp.float32(3.0),
+                                  jnp.full((6,), 25.0), util_prev))
+    np.testing.assert_allclose(u0, 0.5, atol=1e-3)
+
+
+def test_waterfill_respects_heterogeneous_capacity():
+    levels = jnp.zeros((4,), jnp.float32)
+    cap = jnp.asarray([0.25, 1.0, 1.0, 0.25], jnp.float32)
+    u = np.asarray(waterfill(levels, 2.0, cap))
+    assert (u <= np.asarray(cap) + 1e-6).all()
+    assert u.sum() == pytest.approx(2.0, abs=2e-3)
+
+
+def test_router_registry_mirrors_policy_registry():
+    with pytest.raises(KeyError):
+        get_router("nope")
+
+    @register_router
+    class EveryoneToDeviceZero:
+        name = "dev0_test_router"
+
+        def assign(self, load, wear, util_prev, capacity=1.0):
+            n = wear.shape[0]
+            u = jnp.zeros((n,), jnp.float32)
+            return u.at[0].set(jnp.minimum(load, capacity))
+
+    assert isinstance(get_router("dev0_test_router"), EveryoneToDeviceZero)
+    ROUTER_REGISTRY.pop("dev0_test_router")
+
+
+# --------------------------------------------------------------------------- #
+# co-simulation physics
+# --------------------------------------------------------------------------- #
+def test_cosim_zero_load_means_no_aging(cal, policy):
+    scn = het_scenario(cal, n=4, t_spread=0.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax,
+                     np.zeros(48, np.float32), router="round_robin",
+                     n_devices=4)
+    assert float(np.asarray(cos.dvp).max()) == pytest.approx(0.0, abs=1e-4)
+    np.testing.assert_allclose(np.asarray(cos.V),
+                               float(scn.v_init), atol=1e-6)
+
+
+def test_cosim_more_traffic_ages_more(cal, policy):
+    scn = het_scenario(cal, n=4, t_spread=0.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    finals = []
+    for util in (0.2, 0.8):
+        loads = np.full(96, util * 4, np.float32)
+        cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads,
+                         router="round_robin", n_devices=4)
+        finals.append(float(np.asarray(cos.dvp)[-1].max()))
+        assert np.isfinite(np.asarray(cos.dvp)).all()
+    assert finals[1] > finals[0] * 1.2
+
+
+def test_cosim_hot_devices_age_faster_under_uniform_routing(cal, policy):
+    scn = het_scenario(cal, n=4, t_spread=40.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    loads = np.full(96, 2.0, np.float32)
+    cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads,
+                     router="round_robin", n_devices=4)
+    wear = cos.device_wear()[-1]
+    assert (np.diff(wear) > 0).all()        # hotter -> more ΔVth
+
+
+def test_cosim_trajectory_layout(cal, policy):
+    scn = het_scenario(cal, n=3, t_spread=10.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax,
+                     np.full(24, 1.5, np.float32), router="wear_level",
+                     n_devices=3)
+    O = len(OPERATORS)
+    assert cos.V.shape == (24, 3, O)
+    assert cos.util.shape == (24, 3)
+    traj = cos.as_lifetime_trajectory()
+    assert traj.V.shape == (3, O, 24)
+    assert traj.dv.shape[-1] == cos.dv.shape[-1]
+    np.testing.assert_allclose(np.asarray(traj.V)[1, 2],
+                               np.asarray(cos.V)[:, 1, 2], rtol=1e-7)
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: wear leveling beats round robin on the diurnal fleet
+# --------------------------------------------------------------------------- #
+def test_wear_level_cuts_fleet_max_dvth_and_power(cal, policy):
+    """ISSUE 5 acceptance: on a >=8-device fleet (rack thermal gradient +
+    staggered deployment) under the diurnal workload, the wear_level
+    router measurably reduces BOTH fleet-max ΔVth and lifetime fleet
+    power vs round_robin."""
+    scn = het_scenario(cal, n=N_DEV, t_spread=30.0)
+    loads = get_workload("diurnal", n_devices=N_DEV, utilization=0.55,
+                         n_epochs=240).loads(0)
+    ages = np.linspace(0.0, 7.0, N_DEV) * YEAR_S
+    res = compare_routers(cal, scn, policy, loads,
+                          routers=("round_robin", "wear_level"),
+                          n_devices=N_DEV, ages_s=ages)
+    rr, wl = res["round_robin"], res["wear_level"]
+    assert wl["fleet_max_dvp_mv"] < 0.95 * rr["fleet_max_dvp_mv"], \
+        (wl["fleet_max_dvp_mv"], rr["fleet_max_dvp_mv"])
+    assert wl["p_avg_w"] < rr["p_avg_w"] * (1.0 - 1e-3), \
+        (wl["p_avg_w"], rr["p_avg_w"])
+    # the leveler also collapses the wear spread
+    assert wl["wear_spread_mv"] < 0.5 * rr["wear_spread_mv"]
+    # and nobody is left unserved at this utilization
+    assert wl["served_frac"] == pytest.approx(1.0, abs=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# structural guards: single trace, zero retrace
+# --------------------------------------------------------------------------- #
+def test_cosim_single_trace_and_zero_retrace(cal, policy):
+    scn = het_scenario(cal, n=4, t_spread=20.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    loads = get_workload("diurnal", n_devices=4, utilization=0.5,
+                         n_epochs=36).loads(0)
+    kw = dict(router="wear_level", n_devices=4)
+    cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads, **kw)
+    before = dict(sched_lifetime.TRACE_COUNTS)
+    # new traffic, new scenario values, new thresholds: all traced leaves
+    cosimulate(cal.aging, cal.delay_poly,
+               scn.replace(t_amb=jnp.asarray(
+                   T_AMB + np.linspace(5.0, 15.0, 4), jnp.float32)),
+               np.asarray(dmax) * 1.01,
+               get_workload("bursty", n_devices=4, utilization=0.4,
+                            n_epochs=36).loads(9), **kw)
+    assert dict(sched_lifetime.TRACE_COUNTS) == before, \
+        "re-routing new traffic must re-jit NOTHING"
+
+
+def test_cosim_single_trace_of_delay_polynomial(cal, policy):
+    """The whole co-sim must trace the delay polynomial once (one scan),
+    not once per epoch or per device."""
+    calls = {"n": 0}
+    poly = cal.delay_poly
+
+    # a pytree subclass: the co-sim jits the polynomial as a traced
+    # argument, so the counter ticks once per TRACE of the scan body
+    @jax.tree_util.register_pytree_node_class
+    class CountingPoly(type(poly)):
+        def __call__(self, dp, dn, V):
+            calls["n"] += 1
+            return type(poly).__call__(self, dp, dn, V)
+
+    counting = CountingPoly(poly.coeffs, poly.exponents, poly.centers,
+                            poly.halfspans, rmse=poly.rmse)
+    scn = het_scenario(cal, n=3, t_spread=10.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    loads = np.full(48, 1.5, np.float32)
+    cosimulate(cal.aging, counting, scn, dmax, loads,
+               router="round_robin", n_devices=3)
+    # 1 (post-update eval) + max_boosts_per_step re-evals, traced ONCE
+    assert 0 < calls["n"] <= 1 + scn.max_boosts_per_step + 2, calls["n"]
+
+
+# --------------------------------------------------------------------------- #
+# FleetRuntime integration
+# --------------------------------------------------------------------------- #
+def test_apply_load_feeds_snapshot_and_bers(cal):
+    fleet = FleetRuntime(n_devices=4, policy="fault_tolerant")
+    static_ber = fleet.op_ber_array().copy()
+    cos = fleet.apply_load(workload="diurnal", router="wear_level",
+                           n_epochs=48, utilization=0.6)
+    assert cos.n_devices == 4
+    # the age clock sits at the END of the routed horizon: serving now
+    # uses the traffic-aged BERs with no manual fast-forward
+    np.testing.assert_allclose(fleet.ages_years,
+                               float(np.asarray(cos.t)[-1]) / YEAR_S,
+                               rtol=1e-9)
+    O = len(fleet.operators)
+    assert fleet.op_ber_array().shape == (4, O)
+    aged = fleet.snapshot()
+    np.testing.assert_allclose(
+        aged.dvth_p_mv, np.asarray(cos.dvp)[-1], rtol=1e-5)
+    assert not np.allclose(fleet.op_ber_array(), static_ber)
+    # the clock rewinds within the horizon (start of service = epoch 0)
+    fleet.set_age(seconds=0.0)
+    np.testing.assert_allclose(fleet.snapshot().dvth_p_mv,
+                               np.asarray(cos.dvp)[0], rtol=1e-5)
+
+
+def test_apply_load_chains_accumulate_wear(cal):
+    """A second apply_load must resume from the wear the first routed
+    traffic created, not silently restart from a pristine fleet."""
+    fleet = FleetRuntime(n_devices=4, policy="fault_tolerant")
+    for i, years in enumerate((1.0, 3.0, 5.0, 7.0)):
+        fleet.set_age(years=years, device=i)
+    cos1 = fleet.apply_load(workload="diurnal", router="wear_level",
+                            n_epochs=36, utilization=0.5,
+                            horizon_s=2 * YEAR_S)
+    end1 = cos1.device_wear()[-1]
+    cos2 = fleet.apply_load(workload="diurnal", router="wear_level",
+                            n_epochs=36, utilization=0.5,
+                            horizon_s=2 * YEAR_S)
+    start2 = cos2.device_wear()[0]
+    assert (start2 >= end1 - 1e-3).all(), (start2, end1)
+    assert (cos2.device_wear()[-1] > end1 - 1e-3).all()
+
+
+def test_apply_load_resumes_from_staggered_ages(cal):
+    fleet = FleetRuntime(n_devices=4, policy="fault_tolerant")
+    for i, years in enumerate((1.0, 3.0, 5.0, 7.0)):
+        fleet.set_age(years=years, device=i)
+    pre = fleet.snapshot().dvth_p_mv.copy()
+    cos = fleet.apply_load(workload="poisson", router="round_robin",
+                           n_epochs=48, utilization=0.5)
+    first = np.asarray(cos.dvp)[0]
+    # the co-sim starts from (not below) each device's pre-aged state
+    assert (first >= pre - 1e-3).all()
+    assert (np.diff(first.max(axis=-1)) > 0).all()   # stagger preserved
+    # wear_level on the same fleet converges the spread instead
+    fleet2 = FleetRuntime(n_devices=4, policy="fault_tolerant")
+    for i, years in enumerate((1.0, 3.0, 5.0, 7.0)):
+        fleet2.set_age(years=years, device=i)
+    cos2 = fleet2.apply_load(workload="poisson", router="wear_level",
+                             n_epochs=48, utilization=0.5)
+    w_rr = cos.device_wear()[-1]
+    w_wl = cos2.device_wear()[-1]
+    assert (w_wl.max() - w_wl.min()) < 0.5 * (w_rr.max() - w_rr.min())
+
+
+def test_apply_load_explicit_loads_and_registry_errors(cal):
+    fleet = FleetRuntime(n_devices=2, policy="fault_tolerant")
+    loads = np.full(24, 1.0, np.float32)
+    cos = fleet.apply_load(loads=loads, router="least_aged")
+    assert cos.n_epochs == 24
+    with pytest.raises(KeyError):
+        fleet.apply_load(workload="nope", n_epochs=8)
+    with pytest.raises(KeyError):
+        fleet.apply_load(loads=loads, router="nope")
+
+
+def test_fleet_serve_engine_accepts_router(cal):
+    """FleetServeEngine(router=...) serves BERs of traffic-driven age."""
+    from repro.configs import get_config
+    from repro.serve.engine import FleetServeEngine
+    from repro.train.steps import init_train_state
+
+    cfg = get_config("llama3_8b").reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    fleet = FleetRuntime(n_devices=2, policy="fault_tolerant")
+    for i, years in enumerate((2.0, 8.0)):
+        fleet.set_age(years=years, device=i)
+    engine = FleetServeEngine(cfg, params, fleet, max_len=48,
+                              router="wear_level", workload="diurnal")
+    assert hasattr(fleet, "last_cosim")
+    # no manual fast-forward: the engine serves end-of-horizon BERs
+    np.testing.assert_allclose(
+        fleet.snapshot().dvth_p_mv,
+        np.asarray(fleet.last_cosim.dvp)[-1], rtol=1e-5)
+    prompts = np.ones((2, 1, 8), np.int32)
+    res = engine.generate(prompts, 4, temperature=0.0)
+    assert res.tokens.shape == (2, 1, 4)
+    np.testing.assert_allclose(res.bers, fleet.op_ber_array(), rtol=1e-7)
+    assert (res.bers > 0).any()

@@ -40,6 +40,17 @@ SKIP_DIRS = {".git", ".claude", ".pytest_cache", "__pycache__",
 # the incoming task spec (may cite files the task is about to create)
 MENTION_EXEMPT = {"SNIPPETS.md", "PAPERS.md", "ISSUE.md"}
 
+# pass 3 must cover every first-party layer: a package that silently
+# drops out of the symbol table (moved, or caught by SKIP_DIRS) would
+# let its docstring references rot unchecked.  One representative module
+# per layer; extend when adding a layer.
+REQUIRED_MODULES = (
+    "repro.core.scenario", "repro.core.fleet", "repro.core.policy",
+    "repro.sched.workload", "repro.sched.router", "repro.sched.lifetime",
+    "repro.calibrate.resilience_sweep", "repro.serve.steps",
+    "repro.kernels.ops", "repro.launch.schedule",
+)
+
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MD_MENTION = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.md\b")
 EXTERNAL = re.compile(r"^(https?|mailto|ftp):")
@@ -183,7 +194,9 @@ def _resolves(target: str, role: str, modules, methods, global_names) -> bool:
 
 def check_sphinx_refs() -> list[str]:
     modules, methods, global_names = _symbol_table()
-    errors = []
+    errors = [f"symbol table lost required module {mod} "
+              "(moved? add the new path to REQUIRED_MODULES)"
+              for mod in REQUIRED_MODULES if mod not in modules]
     for path in list(_files(".py")) + [
             p for p in _files(".md") if p.name not in MENTION_EXEMPT]:
         rel = path.relative_to(ROOT)
