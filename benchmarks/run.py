@@ -9,7 +9,7 @@ import sys
 import time
 
 SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched", "kernels",
-            "serve", "resilience", "fig1b", "roofline")
+            "serve", "online", "resilience", "fig1b", "roofline")
 
 
 def main():
@@ -41,6 +41,9 @@ def main():
     if "serve" in want:
         from . import serve_bench
         runners["serve"] = serve_bench.run
+    if "online" in want:
+        from . import online_bench
+        runners["online"] = online_bench.run
     if "resilience" in want:
         from . import resilience_bench
         runners["resilience"] = resilience_bench.run

@@ -163,7 +163,8 @@ class FleetRuntime:
 
     # ------------------------------------------------------------------ #
     def apply_load(self, loads=None, *, workload="diurnal",
-                   router="wear_level", n_epochs: int = 480,
+                   router="wear_level", util_trace=None,
+                   n_epochs: int = 480,
                    horizon_s: Optional[float] = None,
                    utilization: float = 0.5, key: int = 0,
                    capacity: float = 1.0,
@@ -179,6 +180,12 @@ class FleetRuntime:
         ``loads`` is an ``(E,)`` offered-load trace; alternatively
         ``workload`` names a registered arrival model (or passes a
         :class:`repro.sched.workload.Workload`) sized by ``utilization``.
+        ``util_trace`` — an ``(E, N)`` *measured* per-device utilization
+        trace (online-serving slot occupancy; see
+        ``repro.serve.online.OnlineServeResult.lane_utilization``) —
+        bypasses the router entirely and replays the measured duty into
+        the stress recursion: served traffic, not a synthetic envelope,
+        drives the aging.
         The co-simulation *resumes from the fleet's current aged state*
         (staggered ``set_age`` ages fold into the initial trap
         populations).  Afterwards the fleet's age clock counts **service
@@ -194,7 +201,12 @@ class FleetRuntime:
         from repro.sched import lifetime as sched_lifetime
         from repro.sched.workload import Workload, get_workload
 
-        if loads is None:
+        if util_trace is not None:
+            util_trace = np.asarray(util_trace, np.float32)
+            n_epochs = util_trace.shape[0]
+            if loads is None:
+                loads = util_trace.sum(axis=-1)
+        elif loads is None:
             wl = workload if isinstance(workload, Workload) else \
                 get_workload(workload, n_devices=self.n_devices,
                              utilization=utilization, n_epochs=n_epochs)
@@ -218,7 +230,8 @@ class FleetRuntime:
             {"heat_per_util": heat_per_util}
         cos = sched_lifetime.cosimulate(
             self.cal.aging, self.cal.delay_poly, self.scenario, dmax,
-            loads, router=router, n_devices=self.n_devices,
+            loads, router=router, util_trace=util_trace,
+            n_devices=self.n_devices,
             epoch_s=horizon_s / loads.shape[0], capacity=capacity,
             dv0=dv0, v0=v0, **kw)
         self._traj = cos.as_lifetime_trajectory()

@@ -40,7 +40,19 @@ YEAR_S = 365.25 * 24 * 3600.0
 
 
 def main(argv=None):
+    import sys
+    argv_list = list(sys.argv[1:] if argv is None else argv)
+    if "--online" in argv_list:
+        # continuous-batching mode: delegate to the online launcher
+        # (live request queue, slot refills, occupancy-driven aging)
+        from . import online
+        argv_list.remove("--online")
+        return online.main(argv_list)
     ap = argparse.ArgumentParser()
+    ap.add_argument("--online", action="store_true",
+                    help="serve a LIVE request queue with continuous "
+                         "batching instead of a static prompt batch "
+                         "(remaining args go to repro.launch.online)")
     ap.add_argument("--arch", default="deepseek_7b")
     ap.add_argument("--age-years", type=float, default=5.0)
     ap.add_argument("--n-devices", type=int, default=1,

@@ -164,6 +164,12 @@ def decode_attention(q1, k_cache, v_cache, cache_len, *,
     ``cache_len >= S_max`` — the ring holds exactly the attention window.
     Attention is permutation-invariant over KV entries, so slot order does
     not matter; RoPE is applied at absolute positions before caching.
+
+    ``cache_len`` may be a scalar (whole batch at one depth — the classic
+    static-batch decode) or a ``(B,)`` vector of per-row depths (the
+    continuous-batching slot path: every slot attends over its own ragged
+    prefix).  A vector whose entries are all equal masks exactly like the
+    scalar — the two paths are bit-identical.
     """
     B, _, H, hd = q1.shape
     S = k_cache.shape[1]
@@ -173,8 +179,12 @@ def decode_attention(q1, k_cache, v_cache, cache_len, *,
     kt = k_cache.transpose(0, 2, 3, 1)                 # B KV hd S
     s = op_batched_matmul(qg, kt[:, :, None], "qkt", fi, salt)  # B KV G 1 S
     pos = jnp.arange(S)
-    valid = pos < jnp.minimum(cache_len, S)
-    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    if jnp.ndim(cache_len) == 0:
+        valid = (pos < jnp.minimum(cache_len, S))[None, None, None, None]
+    else:                                              # per-row (ragged) depths
+        valid = (pos[None, :] < jnp.minimum(cache_len, S)[:, None]
+                 )[:, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q1.dtype)
     vt = v_cache.transpose(0, 2, 1, 3)                 # B KV S hd
     out = op_batched_matmul(p, vt[:, :, None], "sv", fi, salt)

@@ -164,20 +164,24 @@ def _attn_block(x, bp, cfg: ModelConfig, *, positions, prefix_len,
             # ring addressing: token t lives at slot t % kv_len (identity for
             # full-length caches; wraps for windowed local attention)
             idx = jnp.remainder(cache_len - 1, kv_len)
+            if jnp.ndim(idx) == 0:
+                write = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+                    buf, new, idx, 1)
+            else:                # per-row depths (continuous-batching slots):
+                                 # each row scatters at its own ring position
+                rows = jnp.arange(k.shape[0])
+                write = lambda buf, new: buf.at[rows, idx].set(new[:, 0])
             if qcache:
                 knew, vnew = quantize_cache_entry(k), quantize_cache_entry(v)
-                upd = jax.lax.dynamic_update_slice_in_dim
-                kc = {f: upd(cache["k"][f], knew[f], idx, 1) for f in knew}
-                vc = {f: upd(cache["v"][f], vnew[f], idx, 1) for f in vnew}
+                kc = {f: write(cache["k"][f], knew[f]) for f in knew}
+                vc = {f: write(cache["v"][f], vnew[f]) for f in vnew}
                 k_at = kc["int8_q"].astype(q.dtype) \
                     * kc["int8_s"].astype(q.dtype)
                 v_at = vc["int8_q"].astype(q.dtype) \
                     * vc["int8_s"].astype(q.dtype)
             else:
-                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
-                                                         idx, 1)
-                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
-                                                         idx, 1)
+                kc = write(cache["k"], k)
+                vc = write(cache["v"], v)
                 k_at, v_at = kc, vc
             out = attn_lib.decode_attention(q, k_at, v_at, cache_len, fi=fi,
                                             salt=salt)
@@ -411,9 +415,17 @@ def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
     For windowed attention the cache is ring-indexed by the caller keeping
     ``cache_len <= window`` (the serve engine rolls it); here we index
     directly — correct for cache_len within capacity.
+
+    ``cache_len`` is a scalar (static-batch decode: every row at the same
+    depth) or a ``(B,)`` vector of per-row depths — the continuous-batching
+    slot path, where each slot decodes at its own position and ring-writes
+    its own cache row.  An all-equal vector is bit-identical to the scalar.
     """
     x = embed_tokens(params, cfg, token, with_prefix=False)
-    positions = jnp.full((1, 1), cache_len - 1, jnp.int32)
+    if jnp.ndim(cache_len) == 0:
+        positions = jnp.full((1, 1), cache_len - 1, jnp.int32)
+    else:
+        positions = (cache_len - 1).astype(jnp.int32)[:, None]    # (B, 1)
     x, new_cache, _ = _run_blocks(x, params, cfg, positions=positions,
                                   states=cache, cache_len=cache_len, fi=fi)
     x = norm(x, params["final_norm"], cfg.norm)

@@ -114,18 +114,27 @@ def _pop_totals(dv):
 
 
 @functools.lru_cache(maxsize=None)
-def _cosim_fn(router: Router, n_epochs: int, n_devices: int, n_ops: int,
-              max_boosts: int, recovery: bool, avs_enabled: bool):
+def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
+              n_ops: int, max_boosts: int, recovery: bool,
+              avs_enabled: bool, replay: bool = False):
     """Jitted co-sim scan for one (router, static shape) bucket.
 
     Routers are frozen dataclasses (hashable), so each router
     configuration owns one compiled executable; everything else —
     arrival trace, scenario leaves, thresholds, heating coefficient,
     capacity, initial state — is a traced argument.
+
+    ``replay=True`` builds the *measured-utilization* variant: the scan
+    consumes a per-epoch ``(E, N)`` utilization trace instead of calling
+    ``router.assign`` (``router`` is ``None`` — one executable serves
+    every replay source).  Feeding a routed run's own ``util`` output
+    back through the replay path reproduces its trajectory bit-for-bit:
+    the stress recursion downstream of ``util`` is the same code.
     """
 
     def run(params: AgingParams, poly: DelayPolynomial, scn: Scenario,
-            dmax, loads, epoch_s, capacity, heat, dv0, v0, util0):
+            dmax, loads, epoch_s, capacity, heat, dv0, v0, util0,
+            *util_xs):
         TRACE_COUNTS["cosim"] += 1
         duty0 = jnp.broadcast_to(
             jnp.asarray(scn.duty, jnp.float32), (n_devices,))
@@ -145,11 +154,15 @@ def _cosim_fn(router: Router, n_epochs: int, n_devices: int, n_ops: int,
                                 (n_devices, n_ops))
         epoch_s = jnp.asarray(epoch_s, jnp.float32)
 
-        def epoch_step(carry, load):
+        def epoch_step(carry, x):
             dv, v, util_prev = carry
-            # duty-cycle feedback: route on the wear the traffic created
-            wear = jnp.max(_pop_totals(dv)[0], axis=-1)          # (N,)
-            util = router.assign(load, wear, util_prev, capacity)
+            if replay:                      # measured duty, no routing
+                load, util = x
+            else:
+                load = x
+                # duty-cycle feedback: route on the wear traffic created
+                wear = jnp.max(_pop_totals(dv)[0], axis=-1)      # (N,)
+                util = router.assign(load, wear, util_prev, capacity)
             # the paper's stress inputs, recomputed from routed load
             duty = duty0 * util
             toggle = toggle0 * util
@@ -176,8 +189,10 @@ def _cosim_fn(router: Router, n_epochs: int, n_devices: int, n_ops: int,
             return (dv, v, util), {"util": util, "V": v, "delay": delay,
                                    "dvp": dvp, "dvn": dvn, "dv": dv}
 
-        _, out = jax.lax.scan(epoch_step, (dv0, v0, util0),
-                              jnp.asarray(loads, jnp.float32))
+        xs = jnp.asarray(loads, jnp.float32)
+        if replay:
+            xs = (xs, jnp.asarray(util_xs[0], jnp.float32))
+        _, out = jax.lax.scan(epoch_step, (dv0, v0, util0), xs)
         return out
 
     return jax.jit(run)
@@ -186,6 +201,7 @@ def _cosim_fn(router: Router, n_epochs: int, n_devices: int, n_ops: int,
 def cosimulate(params: AgingParams, poly: DelayPolynomial,
                scenario: Scenario, delay_max, loads,
                router: Router | str = "wear_level", *,
+               util_trace=None,
                n_devices: Optional[int] = None,
                epoch_s: Optional[float] = None,
                capacity: float = 1.0,
@@ -205,12 +221,38 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
     ``dv0 / v0 / util0`` resume the recursion from an existing fleet
     state (see :meth:`repro.core.fleet.FleetRuntime.apply_load`).
 
+    ``util_trace`` — an ``(E, N)`` *measured* per-device utilization
+    trace (e.g. online-serving slot occupancy resampled to the epoch
+    grid; see ``repro.serve.online``) — switches the scan to replay
+    mode: the trace drives the stress recursion directly and ``router``
+    is ignored.  ``loads`` may then be ``None`` (it defaults to the
+    per-epoch sum of the trace, recorded for bookkeeping only).
+    Replaying a routed run's own ``cos.util`` output is bit-identical
+    to the routed run.
+
     Returns a :class:`CoSimTrajectory`; ONE jitted scan per
     (router, shape) — re-routing new traffic re-jits nothing.
     """
-    router = get_router(router)
+    replay = util_trace is not None
+    if replay:
+        util_trace = jnp.asarray(util_trace, jnp.float32)
+        assert util_trace.ndim == 2, \
+            f"util_trace must be (E, N), got {util_trace.shape}"
+        if n_devices is None:
+            n_devices = util_trace.shape[1]
+        assert util_trace.shape[1] == n_devices, \
+            f"util_trace device dim {util_trace.shape[1]} != {n_devices}"
+        if loads is None:
+            loads = util_trace.sum(axis=-1)
+        router = None
+    else:
+        router = get_router(router)
     loads = jnp.asarray(loads, jnp.float32)
     assert loads.ndim == 1, f"loads must be (E,), got {loads.shape}"
+    if replay:
+        assert loads.shape[0] == util_trace.shape[0], \
+            f"loads epochs {loads.shape[0]} != util_trace " \
+            f"{util_trace.shape[0]}"
     dmax = jnp.asarray(delay_max, jnp.float32)
     sbatch = scenario.batch_shape
     assert len(sbatch) <= 1, \
@@ -233,12 +275,14 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
         util0 = jnp.zeros((n_devices,), jnp.float32)
 
     fn = _cosim_fn(router, E, n_devices, n_ops,
-                   scenario.max_boosts_per_step, recovery, avs_enabled)
+                   scenario.max_boosts_per_step, recovery, avs_enabled,
+                   replay)
+    xtra = (util_trace,) if replay else ()
     out = fn(params, poly, scenario, dmax, loads,
              jnp.float32(epoch_s), jnp.float32(capacity),
              jnp.float32(heat_per_util),
              jnp.asarray(dv0, jnp.float32), jnp.asarray(v0, jnp.float32),
-             jnp.asarray(util0, jnp.float32))
+             jnp.asarray(util0, jnp.float32), *xtra)
     t = (np.arange(E, dtype=np.float64) + 1.0) * float(epoch_s)
     return CoSimTrajectory(t=jnp.asarray(t, jnp.float32), load=loads,
                            util=out["util"], V=out["V"],

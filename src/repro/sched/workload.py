@@ -94,20 +94,29 @@ class Workload:
         requests per device-epoch (so relative noise shrinks as traffic
         grows, like real arrival counts), then flash-crowd epochs multiply
         their load by ``burst_gain``.  ``key=None`` (or an int seed)
-        selects a deterministic stream — two calls with the same key are
-        bit-identical, which the co-simulation caching relies on.
+        selects a deterministic stream — an int seed ``s`` and
+        ``jax.random.PRNGKey(s)`` are the SAME stream, and two calls with
+        the same key are bit-identical, which the co-simulation caching
+        relies on.
+
+        Every field broadcasts against the full ``batch_shape`` before
+        sampling, so batch dims carried only by ``quanta`` or
+        ``burst_prob`` (e.g. a granularity sweep over one envelope) emit
+        proper batched traces; a zero envelope stays exactly zero through
+        quantisation and bursts (``0 * burst_gain == 0``).
         """
         if key is None or isinstance(key, int):
             key = jax.random.PRNGKey(0 if key is None else key)
         k_noise, k_burst = jax.random.split(key)
-        env = self.envelope()
-        q = jnp.asarray(self.quanta, jnp.float32)[..., None]
-        counts = jax.random.poisson(k_noise, env * q, shape=env.shape)
+        shape = self.batch_shape + (self.n_epochs,)
+        env = jnp.broadcast_to(self.envelope(), shape)
+        q = jnp.broadcast_to(
+            jnp.asarray(self.quanta, jnp.float32)[..., None], shape)
+        counts = jax.random.poisson(k_noise, env * q, shape=shape)
         load = counts.astype(jnp.float32) / q
         p = jnp.asarray(self.burst_prob, jnp.float32)[..., None]
         gain = jnp.asarray(self.burst_gain, jnp.float32)[..., None]
-        burst = jax.random.bernoulli(
-            k_burst, jnp.broadcast_to(p, env.shape))
+        burst = jax.random.bernoulli(k_burst, jnp.broadcast_to(p, shape))
         return jnp.where(burst, load * gain, load)
 
     def to_dict(self) -> Dict[str, Any]:

@@ -1,8 +1,17 @@
-"""Serving layer: step/generation builders and the aging-aware engines."""
+"""Serving layer: step/generation builders, the aging-aware engines, and
+the continuous-batching online engine (live request queues)."""
 from .steps import (make_decode_fn, make_decode_step, make_generate_fn,
                     make_prefill_fn, make_prefill_step, sample_token)
-from .engine import FleetServeEngine, ServeEngine
+from .engine import (FleetServeEngine, ServeEngine, cache_stats,
+                     clear_caches)
+from .slots import SlotState, init_slots
+from .online import (OnlineFleetEngine, OnlineServeEngine,
+                     OnlineServeResult, Request, RequestQueue,
+                     requests_from_workload)
 
 __all__ = ["make_decode_fn", "make_decode_step", "make_generate_fn",
            "make_prefill_fn", "make_prefill_step", "sample_token",
-           "FleetServeEngine", "ServeEngine"]
+           "FleetServeEngine", "ServeEngine", "cache_stats",
+           "clear_caches", "SlotState", "init_slots",
+           "OnlineFleetEngine", "OnlineServeEngine", "OnlineServeResult",
+           "Request", "RequestQueue", "requests_from_workload"]

@@ -27,14 +27,16 @@ array-native ``op_ber_array`` accessor — no per-device ``DeviceView``
 round-trips), so a heterogeneous-age fleet serves a sharded prompt batch
 in a single dispatch.
 
-Continuous batching slots are deliberately out of scope — the paper's
-contribution is below the batching policy layer — but the whole-generation
-function is the unit any future continuous-batching scheduler would queue.
+Continuous batching lives one layer up: :mod:`repro.serve.online` runs a
+LIVE request queue on fixed slots over the same scanned decode — slot
+refills between compiled chunks are traced-leaf updates (no re-jit), and
+the measured slot occupancy replays into the fleet's aging recursion.
+This module stays the static-batch engine underneath it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
 from typing import Dict, Optional
 
 import jax
@@ -67,7 +69,76 @@ class FleetGenerateResult:
 # --------------------------------------------------------------------------- #
 # module-level compile caches: engines with the same config share traces
 # --------------------------------------------------------------------------- #
-@functools.lru_cache(maxsize=None)
+# Online serving is a long-lived process: an unbounded cache of compiled
+# functions (each jit wrapper owns its XLA executables) is a slow memory
+# leak across config/shape churn.  Every serve-side compile cache is a
+# bounded LRU registered here — ``cache_stats()`` / ``clear_caches()``
+# expose and reset them fleet-wide (``repro.serve.online`` registers its
+# slot-prefill/decode-chunk caches through the same mechanism).
+COMPILE_CACHE_MAXSIZE = 32
+
+_COMPILE_CACHES: list = []
+
+
+class CompiledFnCache:
+    """Bounded LRU over a compiled-function *builder*.
+
+    Keys are the builder's (hashable) positional args; values are jitted
+    wrappers.  Evicting an entry drops the only reference to its jit
+    wrapper — and with it the wrapper's compiled executables — so a
+    long-lived serving process cannot grow compiled-fn memory without
+    bound.  ``maxsize`` is mutable (tests shrink it to exercise eviction).
+    """
+
+    def __init__(self, name: str, builder,
+                 maxsize: int = COMPILE_CACHE_MAXSIZE):
+        self.name = name
+        self._builder = builder
+        self.__doc__ = builder.__doc__
+        self.maxsize = maxsize
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+        _COMPILE_CACHES.append(self)
+
+    def __call__(self, *key):
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        fn = self._builder(*key)
+        self._entries[key] = fn
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return fn
+
+    def clear(self):
+        self._entries.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {"currsize": len(self._entries), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+def compile_cache(name: str):
+    """Decorator: route a builder through a registered bounded LRU."""
+    return lambda builder: CompiledFnCache(name, builder)
+
+
+def cache_stats() -> Dict[str, Dict[str, int]]:
+    """Per-cache ``{currsize, maxsize, hits, misses, evictions}``."""
+    return {c.name: c.stats() for c in _COMPILE_CACHES}
+
+
+def clear_caches() -> None:
+    """Drop every cached compiled function (and its XLA executables)."""
+    for c in _COMPILE_CACHES:
+        c.clear()
+
+
+@compile_cache("step_fns")
 def _step_fns(cfg: ModelConfig, max_len: int):
     """Jitted (prefill, decode) taking ``fi`` as a runtime pytree argument.
 
@@ -82,14 +153,14 @@ def _step_fns(cfg: ModelConfig, max_len: int):
     return prefill, decode
 
 
-@functools.lru_cache(maxsize=None)
+@compile_cache("generate")
 def _generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
                  top_k: Optional[int]):
     """The single-dispatch generation function, jitted."""
     return jax.jit(steps.make_generate_fn(cfg, max_len, n_steps, top_k))
 
 
-@functools.lru_cache(maxsize=None)
+@compile_cache("fleet_generate")
 def _fleet_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
                        top_k: Optional[int]):
     """vmap of the generation function over fleet lanes.

@@ -1,0 +1,692 @@
+"""Continuous-batching online serve engine: live request queues on the
+aging fleet.
+
+The static-batch engines (:mod:`repro.serve.engine`) answer "generate
+n tokens for this fixed prompt batch".  Production traffic is a *queue*:
+requests arrive mid-decode, finish at different lengths, and the slots
+they vacate must be refilled without stalling the requests still in
+flight.  This module is that layer:
+
+* :class:`Request` / :class:`RequestQueue` — host-side arrivals with
+  bounded-queue admission control (the queue drops what it cannot hold;
+  drop rates are part of the benchmark output);
+* :func:`requests_from_workload` — turn a :class:`repro.sched.workload`
+  arrival trace into a concrete request schedule (Little's-law sizing:
+  ``load`` device-equivalents ≈ ``load * n_slots * steps_per_epoch /
+  max_new`` requests per epoch);
+* :class:`OnlineServeEngine` — one device: a fixed-slot
+  :class:`~repro.serve.slots.SlotState` advances in compiled decode
+  chunks; between chunks the host harvests completed slots and refills
+  them from the queue.  Every piece of queue state enters the two
+  compiled functions as traced leaves, so slot churn re-jits NOTHING
+  (guarded by ``serve.steps.TRACE_COUNTS``), and a trace with no
+  mid-decode arrivals is bit-exact with the one-shot scanned
+  ``generate`` path;
+* :class:`OnlineFleetEngine` — N fleet lanes stepped in lockstep by
+  vmapped slot functions (one dispatch per chunk for the whole fleet,
+  the :class:`~repro.serve.engine.FleetServeEngine` idiom), with a
+  :mod:`repro.sched.router` policy assigning queued requests to lanes
+  each chunk — utilization feedback uses the *measured* slot occupancy
+  of the previous chunk, and per-lane fault streams come from each
+  lane's own policy-admitted BERs;
+* :class:`OnlineServeResult` — tok/s, p50/p99 request latency,
+  admission drops, and the measured per-step slot-occupancy trace.
+  :meth:`OnlineServeResult.lane_utilization` resamples that occupancy
+  onto a scheduling-epoch grid — the ``util_trace`` that
+  :meth:`repro.core.fleet.FleetRuntime.apply_load` replays into the
+  aging recursion, closing the loop slots -> duty -> aging with
+  *measured* duty instead of a synthetic envelope.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.fleet import FleetRuntime
+from repro.models.layers import FaultConfig
+
+from . import engine as serve_engine
+from . import slots as slots_mod
+from . import steps
+from .slots import EMPTY, SlotState, init_slots
+
+
+# --------------------------------------------------------------------------- #
+# host-side requests
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Request:
+    """One inference request moving through the online engine.
+
+    ``arrival`` is in decode-step units on the engine's service clock;
+    the engine stamps ``t_start`` (prefill) and ``t_done`` (completion)
+    on the same clock, so ``t_done - arrival`` is the request latency in
+    decode steps.  ``tokens`` holds the generated ids once finished.
+    """
+
+    id: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new: int
+    arrival: int = 0
+    t_start: int = -1
+    t_done: int = -1
+    lane: int = -1
+    n_generated: int = 0
+    tokens: Optional[np.ndarray] = None
+
+    @property
+    def latency(self) -> int:
+        return self.t_done - self.arrival
+
+
+class RequestQueue:
+    """Bounded FIFO admission queue.
+
+    ``push`` admits until ``max_queue`` is reached and *drops* the rest
+    (counted — the flash-crowd benchmark reports the drop rate); ``take``
+    hands the scheduler up to ``k`` requests in arrival order.
+    """
+
+    def __init__(self, max_queue: int = 64):
+        self.max_queue = int(max_queue)
+        self._q: collections.deque = collections.deque()
+        self.n_arrived = 0
+        self.n_admitted = 0
+        self.n_dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, req: Request) -> bool:
+        """Admit one request; returns False (and counts a drop) if full."""
+        self.n_arrived += 1
+        if len(self._q) >= self.max_queue:
+            self.n_dropped += 1
+            return False
+        self.n_admitted += 1
+        self._q.append(req)
+        return True
+
+    def take(self, k: int) -> List[Request]:
+        out = []
+        while len(out) < k and self._q:
+            out.append(self._q.popleft())
+        return out
+
+
+def requests_from_workload(workload, *, n_slots: int,
+                           steps_per_epoch: int, max_new: int,
+                           prompt_len: int, vocab: int = 256,
+                           n_devices: int = 1, seed: int = 0,
+                           n_epochs: Optional[int] = None,
+                           loads=None) -> List[Request]:
+    """Concretise a :class:`~repro.sched.workload.Workload` trace into
+    requests.
+
+    ``load`` device-equivalents in an epoch means the traffic would keep
+    ``load`` devices' slots busy for the whole epoch; with ``n_slots``
+    slots serving one token per step, that is ``load * n_slots *
+    steps_per_epoch`` slot-steps, i.e. ``~ / max_new`` requests
+    (Little's law).  Arrival offsets are uniform within each epoch and
+    prompts are uniform token ids — the *count* process carries the
+    workload's structure (diurnal envelope, Poisson noise, flash
+    crowds), which is what the serving metrics respond to.
+    ``loads`` overrides the sampled trace (e.g. a hand-built schedule).
+    """
+    from repro.sched.workload import Workload, get_workload
+    if loads is None:
+        wl = workload if isinstance(workload, Workload) else \
+            get_workload(workload, n_devices=n_devices,
+                         **({} if n_epochs is None
+                            else {"n_epochs": n_epochs}))
+        loads = np.asarray(wl.loads(seed), np.float64)
+    loads = np.atleast_1d(np.asarray(loads, np.float64))
+    assert loads.ndim == 1, f"loads must be (E,), got {loads.shape}"
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = 0
+    per_req = max(int(max_new), 1)
+    for e, load in enumerate(loads):
+        lam = float(load) * n_slots * steps_per_epoch / per_req
+        n = int(rng.poisson(max(lam, 0.0)))
+        offs = np.sort(rng.integers(0, steps_per_epoch, size=n))
+        for off in offs:
+            reqs.append(Request(
+                id=rid,
+                prompt=rng.integers(0, vocab, size=prompt_len)
+                          .astype(np.int32),
+                max_new=per_req,
+                arrival=int(e * steps_per_epoch + off)))
+            rid += 1
+    return reqs
+
+
+# --------------------------------------------------------------------------- #
+# result + occupancy -> aging replay
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class OnlineServeResult:
+    """What an online serve run measured.
+
+    ``occupancy`` is the per-step slot-activity trace — ``(T, K)`` for a
+    single device, ``(T, N, K)`` for a fleet — where idle host steps
+    (empty system waiting on arrivals) appear as all-False rows: the
+    duty cycle the hardware actually sustained, which
+    :meth:`lane_utilization` resamples onto the aging epoch grid.
+    """
+
+    completed: List[Request]
+    occupancy: np.ndarray
+    n_arrived: int
+    n_dropped: int
+    total_steps: int
+    wall_s: float
+    n_tokens: int
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed)
+
+    @property
+    def drop_rate(self) -> float:
+        return self.n_dropped / max(self.n_arrived, 1)
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.n_tokens / max(self.wall_s, 1e-9)
+
+    def latencies(self) -> np.ndarray:
+        """Request latencies [decode steps], one per completed request."""
+        return np.asarray([r.latency for r in self.completed], np.float64)
+
+    def latency_percentiles(self, qs=(50.0, 99.0)) -> Dict[str, float]:
+        lat = self.latencies()
+        if lat.size == 0:
+            return {f"p{q:g}": float("nan") for q in qs}
+        return {f"p{q:g}": float(np.percentile(lat, q)) for q in qs}
+
+    def lane_utilization(self, n_epochs: int) -> np.ndarray:
+        """Measured per-device duty cycle on an ``n_epochs`` grid.
+
+        Splits the step axis into ``n_epochs`` contiguous windows and
+        averages slot activity per window — the mean fraction of slots
+        busy, exactly the ``util`` a router would have assigned.  Shape
+        ``(E,)`` for a single device, ``(E, N)`` for a fleet: feed the
+        fleet form to ``FleetRuntime.apply_load(util_trace=...)``.
+        """
+        occ = np.asarray(self.occupancy, np.float64)
+        T = occ.shape[0]
+        assert T > 0, "no served steps to resample"
+        # per-step duty: mean over the slot axis (last)
+        duty = occ.mean(axis=-1)                      # (T,) or (T, N)
+        edges = np.linspace(0, T, n_epochs + 1).astype(np.int64)
+        out = np.zeros((n_epochs,) + duty.shape[1:], np.float64)
+        for e in range(n_epochs):
+            lo, hi = edges[e], max(edges[e + 1], edges[e] + 1)
+            out[e] = duty[lo:min(hi, T)].mean(axis=0) if lo < T else 0.0
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        d = {"n_arrived": self.n_arrived, "n_dropped": self.n_dropped,
+             "n_completed": self.n_completed,
+             "drop_rate": self.drop_rate, "total_steps": self.total_steps,
+             "n_tokens": self.n_tokens, "wall_s": self.wall_s,
+             "tok_per_s": self.tok_per_s,
+             "mean_occupancy": float(np.asarray(self.occupancy,
+                                                np.float64).mean())}
+        d.update(self.latency_percentiles())
+        return d
+
+
+# --------------------------------------------------------------------------- #
+# compiled slot functions (bounded LRU, shared with the engine caches)
+# --------------------------------------------------------------------------- #
+@serve_engine.compile_cache("online_prefill")
+def _prefill_slots_fn(cfg: ModelConfig, max_len: int, top_k: Optional[int]):
+    """Jitted slot-refill prefill (one entry per config/max_len/top_k)."""
+    return jax.jit(slots_mod.make_prefill_slots_fn(cfg, max_len, top_k))
+
+
+@serve_engine.compile_cache("online_chunk")
+def _decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
+                     top_k: Optional[int]):
+    """Jitted decode chunk (one entry per config/chunk_steps/top_k)."""
+    return jax.jit(slots_mod.make_decode_chunk_fn(cfg, chunk_steps, top_k))
+
+
+@serve_engine.compile_cache("online_fleet_prefill")
+def _fleet_prefill_slots_fn(cfg: ModelConfig, max_len: int,
+                            top_k: Optional[int]):
+    """vmap of the slot refill over fleet lanes (params broadcast)."""
+    fn = slots_mod.make_prefill_slots_fn(cfg, max_len, top_k)
+    return jax.jit(jax.vmap(fn, in_axes=(None, 0, 0, 0, 0, 0, 0, None,
+                                         None)))
+
+
+@serve_engine.compile_cache("online_fleet_chunk")
+def _fleet_decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
+                           top_k: Optional[int]):
+    """vmap of the decode chunk over fleet lanes (params broadcast)."""
+    fn = slots_mod.make_decode_chunk_fn(cfg, chunk_steps, top_k)
+    return jax.jit(jax.vmap(fn, in_axes=(None, 0, 0, None, None)))
+
+
+# --------------------------------------------------------------------------- #
+# single-device online engine
+# --------------------------------------------------------------------------- #
+class OnlineServeEngine:
+    """Serve a live request queue on one (aging) device.
+
+    The service loop alternates two compiled calls — refill freed slots
+    (batched prompt prefill, ``jnp.where``-merged into live state) and a
+    ``chunk_steps``-long scanned decode — with host work between chunks
+    limited to queue bookkeeping on small ``(K,)`` vectors.  All slot
+    state is traced leaves: steady-state serving re-jits nothing.
+
+    With no mid-decode arrivals (all slots filled once, no EOS) the
+    token output is bit-exact with ``ServeEngine.generate(scan=True)``
+    at the same seed — the chunked path consumes the identical key and
+    fault-stream chains (regression-tested in
+    ``tests/test_serve_online.py``).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, runtime=None,
+                 device: int = 0, n_slots: int = 4, max_len: int = 512,
+                 max_new_cap: int = 64, chunk_steps: int = 8,
+                 max_queue: int = 64, use_systolic_kernel: bool = False,
+                 use_fused_kernel: bool = True, seed: int = 0):
+        assert not cfg.n_encoder_layers and not cfg.prefix_tokens, \
+            "online serving covers decoder-only families"
+        self.cfg = cfg
+        self.params = params
+        if isinstance(runtime, FleetRuntime):
+            runtime = runtime.device(device)
+        self.runtime = runtime
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.max_new_cap = int(max_new_cap)
+        self.chunk_steps = int(chunk_steps)
+        self.max_queue = int(max_queue)
+        self.use_kernel = use_systolic_kernel
+        self.use_fused = use_fused_kernel
+        self._key = jax.random.PRNGKey(seed)
+
+    # same derivation as ServeEngine._fault_config — the parity tests
+    # rely on the two engines consuming identical key chains
+    def _fault_config(self) -> Optional[FaultConfig]:
+        if self.runtime is None:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        bers = {op: jnp.float32(ber)
+                for op, ber in self.runtime.op_bers().items()}
+        return FaultConfig(bers=bers, key=sub, step=jnp.int32(0),
+                           use_systolic_kernel=self.use_kernel,
+                           fused=self.use_fused)
+
+    # ------------------------------------------------------------------ #
+    def serve(self, requests: Sequence[Request], *, greedy: bool = True,
+              temperature: Optional[float] = None,
+              top_k: Optional[int] = None, eos_id: int = -1,
+              max_steps: Optional[int] = None) -> OnlineServeResult:
+        """Run the queue to completion (or ``max_steps``).
+
+        ``requests`` arrive on the service clock at their ``arrival``
+        steps; the bounded queue applies admission control; ``eos_id=-1``
+        disables EOS (every request runs its ``max_new`` budget).
+        Returns the measured :class:`OnlineServeResult`.
+        """
+        cfg = self.cfg
+        K, C = self.n_slots, self.max_new_cap
+        fi = self._fault_config()
+        self._key, call_key = jax.random.split(self._key)
+        temp = serve_engine.ServeEngine._temperature(greedy, temperature)
+        eos = jnp.int32(eos_id)
+
+        pending = sorted(requests, key=lambda r: r.arrival)
+        assert all(len(r.prompt) + min(r.max_new, C) <= self.max_len
+                   for r in pending), \
+            "prompt_len + max_new must fit the cache (max_len)"
+        prompt_len = len(pending[0].prompt) if pending else 1
+        assert all(len(r.prompt) == prompt_len for r in pending), \
+            "online slots serve one fixed prompt length per run"
+        queue = RequestQueue(self.max_queue)
+        refill_fn = _prefill_slots_fn(cfg, self.max_len, top_k)
+        chunk_fn = _decode_chunk_fn(cfg, self.chunk_steps, top_k)
+
+        slots = init_slots(cfg, K, self.max_len, C, call_key)
+        live: Dict[int, Request] = {}
+        completed: List[Request] = []
+        occ_rows: List[np.ndarray] = []
+        now = 0                       # host service clock [decode steps]
+        wall0 = time.perf_counter()
+
+        def admit():
+            while pending and pending[0].arrival <= now:
+                queue.push(pending.pop(0))
+
+        while pending or len(queue) or live:
+            if max_steps is not None and now >= max_steps:
+                break
+            admit()
+            # ---- refill freed slots from the queue ------------------- #
+            free = [k for k in range(K) if k not in live]
+            take = queue.take(len(free))
+            if take:
+                prompts = np.zeros((K, prompt_len), np.int32)
+                mask = np.zeros((K,), bool)
+                rids = np.full((K,), EMPTY, np.int32)
+                mnew = np.ones((K,), np.int32)
+                for k, r in zip(free, take):
+                    prompts[k] = r.prompt
+                    mask[k] = True
+                    rids[k] = r.id
+                    mnew[k] = r.max_new
+                    r.t_start = now
+                    live[k] = r
+                slots = refill_fn(self.params, slots,
+                                  jnp.asarray(prompts), jnp.asarray(mask),
+                                  jnp.asarray(rids), jnp.asarray(mnew),
+                                  fi, temp, eos)
+                # prefill emits token 0 of each refilled request; requests
+                # already done (1-token budget / instant EOS) harvest below
+                self._harvest(slots, live, completed, now, trace=None)
+            if not live:
+                if len(queue):
+                    # every refilled request finished AT prefill (instant
+                    # EOS / 1-token budget): slots freed, refill again
+                    continue
+                # idle: no device work — jump the clock to the next
+                # arrival, recording zero occupancy for the skipped steps
+                if not pending:
+                    break
+                nxt = pending[0].arrival
+                if max_steps is not None:
+                    nxt = min(nxt, max_steps)
+                skip = max(nxt - now, 1)
+                occ_rows.append(np.zeros((skip, K), bool))
+                now += skip
+                continue
+            # ---- one compiled decode chunk --------------------------- #
+            slots, active_trace = chunk_fn(self.params, slots, fi, temp,
+                                           eos)
+            trace = np.asarray(active_trace)          # (chunk, K)
+            occ_rows.append(trace)
+            now += self.chunk_steps
+            self._harvest(slots, live, completed, now, trace=trace)
+
+        if live:                  # max_steps cutoff: stamp partial progress
+            ngen = np.asarray(slots.n_generated)
+            toks = np.asarray(slots.tokens)
+            for k, r in live.items():
+                r.n_generated = int(ngen[k])
+                r.tokens = toks[k, :r.n_generated].copy()
+        occupancy = (np.concatenate(occ_rows, axis=0) if occ_rows
+                     else np.zeros((0, K), bool))
+        n_tokens = int(sum(r.n_generated for r in completed))
+        n_tokens += int(sum(r.n_generated for r in live.values()))
+        return OnlineServeResult(
+            completed=completed, occupancy=occupancy,
+            n_arrived=queue.n_arrived, n_dropped=queue.n_dropped,
+            total_steps=now, wall_s=time.perf_counter() - wall0,
+            n_tokens=n_tokens)
+
+    # ------------------------------------------------------------------ #
+    def _harvest(self, slots: SlotState, live: Dict[int, Request],
+                 completed: List[Request], now: int,
+                 trace: Optional[np.ndarray]):
+        """Move finished slots' requests out of ``live`` (one host sync)."""
+        active = np.asarray(slots.active)
+        if active.all():
+            return
+        ngen = np.asarray(slots.n_generated)
+        toks = None
+        for k in [k for k, r in live.items() if not active[k]]:
+            r = live.pop(k)
+            if toks is None:
+                toks = np.asarray(slots.tokens)
+            r.n_generated = int(ngen[k])
+            r.tokens = toks[k, :r.n_generated].copy()
+            if trace is None:
+                r.t_done = now            # finished at prefill
+            else:
+                # last chunk step this slot actually served
+                served = np.flatnonzero(trace[:, k])
+                last = int(served[-1]) + 1 if served.size else 0
+                r.t_done = now - trace.shape[0] + last
+            completed.append(r)
+
+
+# --------------------------------------------------------------------------- #
+# fleet online engine: router-dispatched lanes, one vmapped dispatch/chunk
+# --------------------------------------------------------------------------- #
+class OnlineFleetEngine:
+    """Serve a live queue across every lane of a :class:`FleetRuntime`.
+
+    All N lanes advance in lockstep: one vmapped refill + one vmapped
+    decode chunk per scheduling round for the WHOLE fleet.  Between
+    rounds a :mod:`repro.sched.router` policy converts the queue's
+    offered load into per-lane utilization targets — fed by each lane's
+    *measured* occupancy from the previous chunk and the fleet's current
+    wear signal — and the dispatcher hands queued requests to the lanes
+    with the most headroom.  Per-lane fault streams carry each device's
+    own policy-admitted BERs (the ``op_ber_array`` fleet snapshot), so
+    an aged lane serves its requests at its own error rate.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, fleet: FleetRuntime, *,
+                 n_slots: int = 4, max_len: int = 512,
+                 max_new_cap: int = 64, chunk_steps: int = 8,
+                 max_queue: int = 256, router="wear_level",
+                 capacity: float = 1.0,
+                 use_systolic_kernel: bool = False,
+                 use_fused_kernel: bool = True, seed: int = 0):
+        from repro.sched.router import get_router
+        assert not cfg.n_encoder_layers and not cfg.prefix_tokens, \
+            "online serving covers decoder-only families"
+        self.cfg = cfg
+        self.params = params
+        self.fleet = fleet
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.max_new_cap = int(max_new_cap)
+        self.chunk_steps = int(chunk_steps)
+        self.max_queue = int(max_queue)
+        self.router = get_router(router)
+        self.capacity = float(capacity)
+        self.use_kernel = use_systolic_kernel
+        self.use_fused = use_fused_kernel
+        self._key = jax.random.PRNGKey(seed)
+
+    @property
+    def n_devices(self) -> int:
+        return self.fleet.n_devices
+
+    # ------------------------------------------------------------------ #
+    def _fleet_fault_config(self, call_key) -> FaultConfig:
+        """Per-lane FaultConfig: every leaf carries the fleet axis."""
+        N = self.fleet.n_devices
+        ber = self.fleet.op_ber_array()                     # (N, O)
+        bers = {op: jnp.asarray(ber[:, i], jnp.float32)
+                for i, op in enumerate(self.fleet.operators)}
+        keys = jax.random.split(call_key, N)
+        return FaultConfig(bers=bers, key=keys,
+                           step=jnp.zeros((N,), jnp.int32),
+                           use_systolic_kernel=self.use_kernel,
+                           fused=self.use_fused)
+
+    def _init_slots(self, key) -> SlotState:
+        """Lane-stacked slot state: every leaf gains a leading N axis."""
+        states = [init_slots(self.cfg, self.n_slots, self.max_len,
+                             self.max_new_cap, k)
+                  for k in jax.random.split(key, self.n_devices)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    def _wear(self) -> np.ndarray:
+        """Per-device wear signal for the router (worst-domain ΔVth_p)."""
+        return np.asarray(self.fleet.snapshot().dvth_p_mv).max(axis=-1)
+
+    # ------------------------------------------------------------------ #
+    def serve(self, requests: Sequence[Request], *, greedy: bool = True,
+              temperature: Optional[float] = None,
+              top_k: Optional[int] = None, eos_id: int = -1,
+              max_steps: Optional[int] = None) -> OnlineServeResult:
+        """Run the queue across the fleet; see
+        :meth:`OnlineServeEngine.serve` for the protocol.  ``occupancy``
+        comes back ``(T, N, K)`` — ``lane_utilization`` then yields the
+        ``(E, N)`` trace ``FleetRuntime.apply_load(util_trace=...)``
+        replays into the aging recursion.
+        """
+        cfg = self.cfg
+        N, K, C = self.n_devices, self.n_slots, self.max_new_cap
+        self._key, fi_key = jax.random.split(self._key)
+        self._key, call_key = jax.random.split(self._key)
+        fi = self._fleet_fault_config(fi_key)
+        temp = serve_engine.ServeEngine._temperature(greedy, temperature)
+        eos = jnp.int32(eos_id)
+
+        pending = sorted(requests, key=lambda r: r.arrival)
+        assert all(len(r.prompt) + min(r.max_new, C) <= self.max_len
+                   for r in pending), \
+            "prompt_len + max_new must fit the cache (max_len)"
+        prompt_len = len(pending[0].prompt) if pending else 1
+        assert all(len(r.prompt) == prompt_len for r in pending), \
+            "online slots serve one fixed prompt length per run"
+        queue = RequestQueue(self.max_queue)
+        refill_fn = _fleet_prefill_slots_fn(cfg, self.max_len, top_k)
+        chunk_fn = _fleet_decode_chunk_fn(cfg, self.chunk_steps, top_k)
+
+        slots = self._init_slots(call_key)
+        live: Dict[tuple, Request] = {}          # (lane, slot) -> Request
+        completed: List[Request] = []
+        occ_rows: List[np.ndarray] = []
+        util_prev = np.zeros((N,), np.float64)   # measured, fed back
+        wear = self._wear()
+        now = 0
+        wall0 = time.perf_counter()
+
+        def admit():
+            while pending and pending[0].arrival <= now:
+                queue.push(pending.pop(0))
+
+        while pending or len(queue) or live:
+            if max_steps is not None and now >= max_steps:
+                break
+            admit()
+            # ---- route queued requests to lanes ---------------------- #
+            if len(queue):
+                free = {n: [k for k in range(K) if (n, k) not in live]
+                        for n in range(N)}
+                # offered load in device-equivalents over the next chunk
+                demand = sum(min(r.max_new, C) for r in queue._q)
+                load = demand / max(self.chunk_steps * K, 1)
+                util = np.asarray(self.router.assign(
+                    jnp.float32(load), jnp.asarray(wear, jnp.float32),
+                    jnp.asarray(util_prev, jnp.float32), self.capacity),
+                    np.float64)
+                # lane headroom: target slots minus already-busy slots
+                busy = np.asarray([K - len(free[n]) for n in range(N)],
+                                  np.float64)
+                head = np.maximum(util * K - busy, 0.0)
+                order = np.argsort(-head, kind="stable")
+                assign: Dict[int, List[Request]] = {}
+                for n in order:
+                    n = int(n)
+                    want = int(np.ceil(head[n]))
+                    grab = queue.take(min(want, len(free[n])))
+                    if grab:
+                        assign[n] = grab
+                # leftovers when every targeted lane is full: spill to
+                # any free slot (defer only when the fleet is saturated)
+                for n in range(N):
+                    room = len(free[n]) - len(assign.get(n, []))
+                    if room > 0 and len(queue):
+                        assign.setdefault(n, []).extend(queue.take(room))
+                if assign:
+                    prompts = np.zeros((N, K, prompt_len), np.int32)
+                    mask = np.zeros((N, K), bool)
+                    rids = np.full((N, K), EMPTY, np.int32)
+                    mnew = np.ones((N, K), np.int32)
+                    for n, rs in assign.items():
+                        for k, r in zip(free[n], rs):
+                            prompts[n, k] = r.prompt
+                            mask[n, k] = True
+                            rids[n, k] = r.id
+                            mnew[n, k] = r.max_new
+                            r.t_start = now
+                            r.lane = n
+                            live[(n, k)] = r
+                    slots = refill_fn(self.params, slots,
+                                      jnp.asarray(prompts),
+                                      jnp.asarray(mask),
+                                      jnp.asarray(rids),
+                                      jnp.asarray(mnew), fi, temp, eos)
+                    self._harvest(slots, live, completed, now, trace=None)
+            if not live:
+                if len(queue):
+                    continue      # freed at prefill: dispatch again
+                if not pending:
+                    break
+                nxt = pending[0].arrival
+                if max_steps is not None:
+                    nxt = min(nxt, max_steps)
+                skip = max(nxt - now, 1)
+                occ_rows.append(np.zeros((skip, N, K), bool))
+                util_prev = np.zeros((N,), np.float64)
+                now += skip
+                continue
+            # ---- one vmapped decode chunk over all lanes ------------- #
+            slots, active_trace = chunk_fn(self.params, slots, fi, temp,
+                                           eos)
+            trace = np.asarray(active_trace)         # (N, chunk, K)
+            trace = np.moveaxis(trace, 0, 1)         # (chunk, N, K)
+            occ_rows.append(trace)
+            util_prev = trace.mean(axis=(0, 2))      # measured duty (N,)
+            now += self.chunk_steps
+            self._harvest(slots, live, completed, now, trace=trace)
+
+        if live:                  # max_steps cutoff: stamp partial progress
+            ngen = np.asarray(slots.n_generated)
+            toks = np.asarray(slots.tokens)
+            for (n, k), r in live.items():
+                r.n_generated = int(ngen[n, k])
+                r.tokens = toks[n, k, :r.n_generated].copy()
+        occupancy = (np.concatenate(occ_rows, axis=0) if occ_rows
+                     else np.zeros((0, N, K), bool))
+        n_tokens = int(sum(r.n_generated for r in completed))
+        n_tokens += int(sum(r.n_generated for r in live.values()))
+        return OnlineServeResult(
+            completed=completed, occupancy=occupancy,
+            n_arrived=queue.n_arrived, n_dropped=queue.n_dropped,
+            total_steps=now, wall_s=time.perf_counter() - wall0,
+            n_tokens=n_tokens)
+
+    # ------------------------------------------------------------------ #
+    def _harvest(self, slots: SlotState, live: Dict[tuple, Request],
+                 completed: List[Request], now: int,
+                 trace: Optional[np.ndarray]):
+        active = np.asarray(slots.active)            # (N, K)
+        if active.all():
+            return
+        ngen = np.asarray(slots.n_generated)
+        toks = None
+        for (n, k) in [lk for lk, r in live.items()
+                       if not active[lk[0], lk[1]]]:
+            r = live.pop((n, k))
+            if toks is None:
+                toks = np.asarray(slots.tokens)
+            r.n_generated = int(ngen[n, k])
+            r.tokens = toks[n, k, :r.n_generated].copy()
+            if trace is None:
+                r.t_done = now
+            else:
+                served = np.flatnonzero(trace[:, n, k])
+                last = int(served[-1]) + 1 if served.size else 0
+                r.t_done = now - trace.shape[0] + last
+            completed.append(r)

@@ -1,0 +1,249 @@
+"""Slot-state machinery for continuous-batching online serving.
+
+A :class:`SlotState` is the whole in-flight batch of an online engine as
+ONE pytree: ``K`` fixed slots, each holding one live request's ragged KV
+cache row, its decode depth, its sampled-token buffer and its completion
+flags — every per-slot field a traced *leaf*, so the two compiled
+functions built here cover every queue state without retracing:
+
+* :func:`make_prefill_slots_fn` — refill freed slots from the host queue:
+  prefill the whole ``(K, S)`` prompt matrix in one fixed-shape dispatch
+  and ``jnp.where``-merge only the refilled rows into the live state
+  (prompt ids, the refill mask and per-request generation budgets are all
+  traced, extending the FaultConfig-as-pytree caching pattern);
+* :func:`make_decode_chunk_fn` — a ``lax.scan`` over ``chunk_steps``
+  decode steps in which every slot advances at ITS OWN cache depth
+  (vector ``cache_len`` — see :func:`repro.models.transformer.decode_step`),
+  samples in-graph, and retires itself on EOS or budget exhaustion via
+  per-slot completion masks.  Inactive slots still flow through the
+  batched matmuls (fixed shapes) but their state is frozen by masks; the
+  garbage they compute never crosses slot rows and is overwritten by the
+  next refill prefill.
+
+Bit-exactness contract (regression-tested): on a trace with no mid-decode
+arrivals — all ``K`` slots filled once at step 0, no EOS — the initial
+prefill plus chunked decode reproduces
+:func:`repro.serve.steps.make_generate_fn`'s one-shot scanned generation
+token-for-token, including fused-kernel fault streams: the key chain
+splits once per step, the fault stream folds the same global step index,
+and the all-equal vector ``cache_len`` masks identically to the scalar.
+
+``TRACE_COUNTS`` ticks live in :data:`repro.serve.steps.TRACE_COUNTS`
+(``online_prefill`` / ``online_chunk``) — the online tests assert slot
+refills and queue churn re-trace NOTHING.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import transformer as tf
+
+from . import steps
+
+# request_id of an empty (never filled / harvested) slot
+EMPTY = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotState:
+    """K in-flight request slots as one pytree (all fields are leaves).
+
+    ``cache`` is the model's decode-state pytree with the slot axis as its
+    batch axis (attention K/V rings, rglru/rwkv recurrent states).
+    ``cache_len`` counts the tokens currently materialised in each slot's
+    cache row (prompt + generated-so-far); ``tokens`` buffers each slot's
+    generated ids at ``[slot, 0:n_generated]``; ``key`` is the single
+    sampling chain shared by the whole batch (split once per decode step,
+    exactly like the one-shot scanned path); ``step`` is the global decode
+    step counter every per-step fault stream folds in.
+    """
+
+    cache: Any                  # model decode-state pytree, slot-batched
+    cache_len: jax.Array        # (K,) int32 tokens in each slot's cache
+    last_tok: jax.Array         # (K,) int32 next decode input per slot
+    active: jax.Array           # (K,) bool — slot is mid-generation
+    request_id: jax.Array       # (K,) int32 live request id (EMPTY = free)
+    n_generated: jax.Array      # (K,) int32 tokens emitted per slot
+    max_new: jax.Array          # (K,) int32 per-request generation budget
+    tokens: jax.Array           # (K, C) int32 generated-token buffer
+    key: jax.Array              # sampling PRNG chain (shared, split/step)
+    step: jax.Array             # () int32 global decode-step counter
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.cache_len.shape[-1])
+
+    def replace(self, **kw) -> "SlotState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    SlotState,
+    data_fields=("cache", "cache_len", "last_tok", "active", "request_id",
+                 "n_generated", "max_new", "tokens", "key", "step"),
+    meta_fields=())
+
+
+def init_slots(cfg: ModelConfig, n_slots: int, max_len: int,
+               max_new_cap: int, key: jax.Array) -> SlotState:
+    """All-free slot state (every slot empty, caches zeroed)."""
+    K = int(n_slots)
+    return SlotState(
+        cache=tf.init_cache(cfg, K, max_len),
+        cache_len=jnp.zeros((K,), jnp.int32),
+        last_tok=jnp.zeros((K,), jnp.int32),
+        active=jnp.zeros((K,), bool),
+        request_id=jnp.full((K,), EMPTY, jnp.int32),
+        n_generated=jnp.zeros((K,), jnp.int32),
+        max_new=jnp.zeros((K,), jnp.int32),
+        tokens=jnp.zeros((K, int(max_new_cap)), jnp.int32),
+        key=key,
+        step=jnp.int32(0))
+
+
+def _check_family(cfg: ModelConfig):
+    assert not cfg.n_encoder_layers and not cfg.prefix_tokens, \
+        "online slot serving covers decoder-only families (the enc-dec / " \
+        "prefix extras are per-request payloads the fixed-slot refill " \
+        "does not thread yet); use the static-batch engines instead"
+
+
+def _merge_cache(refill, new_cache, old_cache):
+    """``jnp.where`` the refilled rows of ``new_cache`` into ``old_cache``.
+
+    The slot (batch) axis sits at axis 1 of grouped leaves
+    (``(n_groups, K, ...)`` — see :func:`repro.models.transformer.init_cache`)
+    and axis 0 of tail leaves, so the mask is reshaped per section rather
+    than guessed per leaf.
+    """
+    def section(axis):
+        def merge(new, old):
+            shape = [1] * new.ndim
+            shape[axis] = refill.shape[0]
+            return jnp.where(refill.reshape(shape), new, old)
+        return merge
+
+    out = {}
+    if "groups" in old_cache:
+        out["groups"] = jax.tree.map(section(1), new_cache["groups"],
+                                     old_cache["groups"])
+    if "tail" in old_cache:
+        out["tail"] = jax.tree.map(section(0), new_cache["tail"],
+                                   old_cache["tail"])
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# refill: batched prompt prefill merged into freed slots
+# --------------------------------------------------------------------------- #
+def make_prefill_slots_fn(cfg: ModelConfig, max_len: int,
+                          top_k: Optional[int] = None) -> Callable:
+    """Build ``refill(params, slots, prompts, refill, request_id, max_new,
+    fi, temperature, eos) -> SlotState``.
+
+    ``prompts`` is the full ``(K, S)`` matrix (rows of non-refilled slots
+    are don't-care padding — the fixed shape is what keeps one compiled
+    instance covering every refill pattern); ``refill`` is the ``(K,)``
+    boolean mask of slots to (re)fill.  The whole prompt batch prefills in
+    one dispatch, the first token of each refilled request is sampled from
+    the prefill logits (one key split, exactly like the one-shot path),
+    and only the refilled rows replace live state.  A request whose first
+    sampled token is ``eos`` — or whose budget is a single token —
+    completes immediately.
+    """
+    _check_family(cfg)
+    prefill = steps.make_prefill_fn(cfg, max_len)
+
+    def refill_fn(params, slots: SlotState, prompts, refill, request_id,
+                  max_new, fi, temperature, eos) -> SlotState:
+        steps.TRACE_COUNTS["online_prefill"] += 1
+        K, S = prompts.shape
+        if fi is not None:
+            fi = fi.with_seeds()
+        logits, new_cache = prefill(params, prompts,
+                                    None if fi is None
+                                    else fi.for_step(slots.step))
+        key, sub = jax.random.split(slots.key)
+        tok0 = steps.sample_token(logits, sub, temperature, top_k)
+
+        refill = refill.astype(bool)
+        C = slots.tokens.shape[1]
+        max_new = jnp.clip(jnp.asarray(max_new, jnp.int32), 1, C)
+        done0 = (tok0 == eos) | (max_new <= 1)       # one-token requests
+        row0 = jnp.zeros_like(slots.tokens).at[:, 0].set(tok0)
+        return slots.replace(
+            cache=_merge_cache(refill, new_cache, slots.cache),
+            cache_len=jnp.where(refill, jnp.int32(S), slots.cache_len),
+            last_tok=jnp.where(refill, tok0, slots.last_tok),
+            active=jnp.where(refill, ~done0, slots.active),
+            request_id=jnp.where(refill, jnp.asarray(request_id, jnp.int32),
+                                 slots.request_id),
+            n_generated=jnp.where(refill, jnp.int32(1), slots.n_generated),
+            max_new=jnp.where(refill, max_new, slots.max_new),
+            tokens=jnp.where(refill[:, None], row0, slots.tokens),
+            key=key)
+
+    return refill_fn
+
+
+# --------------------------------------------------------------------------- #
+# chunked decode: every slot advances at its own depth
+# --------------------------------------------------------------------------- #
+def make_decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
+                         top_k: Optional[int] = None) -> Callable:
+    """Build ``chunk(params, slots, fi, temperature, eos) ->
+    (SlotState, active_trace)``.
+
+    One ``lax.scan`` advances every slot ``chunk_steps`` decode steps:
+    per-slot ragged depths enter :func:`repro.models.transformer.decode_step`
+    as a vector ``cache_len``, sampling splits the shared key once per
+    step, fault streams fold the global step counter, and per-slot
+    completion masks (EOS hit or budget exhausted) retire slots in-scan.
+    ``active_trace`` is the ``(chunk_steps, K)`` occupancy matrix — which
+    slots actually served each step, the duty-cycle measurement the fleet
+    aging replay consumes.
+    """
+    _check_family(cfg)
+    decode = steps.make_decode_fn(cfg)
+
+    def chunk(params, slots: SlotState, fi, temperature, eos):
+        steps.TRACE_COUNTS["online_chunk"] += 1
+        if fi is not None:
+            fi = fi.with_seeds()
+        K = slots.cache_len.shape[0]
+        C = slots.tokens.shape[1]
+        rows = jnp.arange(K)
+
+        def body(s: SlotState, _):
+            active0 = s.active
+            cl = s.cache_len + 1         # per-slot depth incl. this token
+            t = s.step + 1               # global decode-step index
+            fi_t = None if fi is None else fi.for_step(t)
+            logits, cache = decode(params, s.last_tok[:, None], s.cache,
+                                   cl, fi_t)
+            key, sub = jax.random.split(s.key)
+            tok = steps.sample_token(logits, sub, temperature, top_k)
+            ngen = s.n_generated + 1
+            done = (tok == eos) | (ngen >= s.max_new)
+            col = jnp.clip(s.n_generated, 0, C - 1)
+            tokens = s.tokens.at[rows, col].set(
+                jnp.where(active0, tok, s.tokens[rows, col]))
+            new = s.replace(
+                cache=cache,
+                cache_len=jnp.where(active0, cl, s.cache_len),
+                last_tok=jnp.where(active0, tok, s.last_tok),
+                active=active0 & ~done,
+                n_generated=jnp.where(active0, ngen, s.n_generated),
+                tokens=tokens, key=key, step=t)
+            return new, active0
+
+        slots, active_trace = jax.lax.scan(body, slots, None,
+                                           length=chunk_steps)
+        return slots, active_trace
+
+    return chunk

@@ -401,3 +401,70 @@ def test_fleet_serve_engine_accepts_router(cal):
     assert res.tokens.shape == (2, 1, 4)
     np.testing.assert_allclose(res.bers, fleet.op_ber_array(), rtol=1e-7)
     assert (res.bers > 0).any()
+
+
+# --------------------------------------------------------------------------- #
+# workload edge cases + measured-trace replay
+# --------------------------------------------------------------------------- #
+def test_workload_zero_envelope_stays_zero():
+    """A zero mean load emits an exactly-zero trace even when the burst
+    process fires: bursts MULTIPLY the envelope, they never inject load."""
+    wl = get_workload("bursty", n_devices=4, utilization=0.0, n_epochs=256,
+                      burst_prob=1.0, burst_gain=10.0)
+    np.testing.assert_array_equal(np.asarray(wl.loads(0)),
+                                  np.zeros(256, np.float32))
+
+
+def test_workload_batched_quanta_and_burst_prob():
+    """Per-leaf batch dims on quanta / burst_prob broadcast into the trace
+    batch exactly like Scenario leaves."""
+    wl = Workload(mean_load=2.0, quanta=jnp.asarray([4.0, 64.0, 1e4]),
+                  n_epochs=16)
+    loads = wl.loads(0)
+    assert wl.batch_shape == (3,) and loads.shape == (3, 16)
+    # coarser quanta -> noisier trace (relative Poisson std ~ 1/sqrt(q))
+    std = np.asarray(loads).std(axis=-1)
+    assert std[0] > std[2]
+
+    wl2 = Workload(mean_load=2.0, burst_prob=jnp.asarray([[0.0], [1.0]]),
+                   burst_gain=5.0, quanta=1e4, n_epochs=64)
+    loads2 = np.asarray(wl2.loads(0))
+    assert wl2.batch_shape == (2, 1) and loads2.shape == (2, 1, 64)
+    assert loads2[1].mean() > 3.0 * loads2[0].mean()     # bursts landed
+
+
+def test_workload_int_seed_matches_prngkey():
+    wl = get_workload("diurnal", n_devices=4, utilization=0.5, n_epochs=64)
+    np.testing.assert_array_equal(
+        np.asarray(wl.loads(7)),
+        np.asarray(wl.loads(jax.random.PRNGKey(7))))
+
+
+def test_cosim_replay_of_routed_util_is_bit_identical(cal, policy):
+    """Replaying a routed co-sim's own (E, N) util output through
+    ``util_trace`` reproduces the routed run bit for bit, and ``loads``
+    defaults to the trace's per-epoch sum."""
+    scn = het_scenario(cal, n=4, t_spread=25.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    loads = np.asarray(2.0 + np.sin(np.linspace(0, 6.0, 48)), np.float32)
+    routed = cosimulate(cal.aging, cal.delay_poly, scn, dmax, loads,
+                        router="wear_level", n_devices=4)
+    replay = cosimulate(cal.aging, cal.delay_poly, scn, dmax, None,
+                        util_trace=np.asarray(routed.util), n_devices=4)
+    for f in ("util", "V", "delay", "dvp", "dvn", "dv"):
+        np.testing.assert_array_equal(np.asarray(getattr(routed, f)),
+                                      np.asarray(getattr(replay, f)))
+
+
+def test_cosim_replay_skews_wear_toward_loaded_lane(cal, policy):
+    """A measured trace that parks all duty on lane 0 ages lane 0 only —
+    the replay path honors per-lane structure the router never produced."""
+    scn = het_scenario(cal, n=3, t_spread=0.0)
+    dmax = policy.thresholds(scn, OPERATORS)
+    util = np.zeros((64, 3), np.float32)
+    util[:, 0] = 0.9
+    cos = cosimulate(cal.aging, cal.delay_poly, scn, dmax, None,
+                     util_trace=util, n_devices=3)
+    np.testing.assert_array_equal(np.asarray(cos.util), util)
+    wear = cos.device_wear()[-1]
+    assert wear[0] > 10.0 * max(wear[1], wear[2], 1e-9)

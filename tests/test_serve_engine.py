@@ -143,3 +143,63 @@ def test_engine_uses_policy_bers(setup):
     assert res.bers["o"] <= res.bers["q"]
     assert res.age_years == pytest.approx(9.0)
     assert res.power_w > 0
+
+
+# --------------------------------------------------------------------------- #
+# bounded compile caches
+# --------------------------------------------------------------------------- #
+def test_compile_cache_registry_and_stats():
+    """Every serve-path compiled-fn cache registers into cache_stats()."""
+    import repro.serve.online  # noqa: F401  (registers the online caches)
+    from repro.serve.engine import cache_stats
+    stats = cache_stats()
+    for name in ("step_fns", "generate", "fleet_generate",
+                 "online_prefill", "online_chunk",
+                 "online_fleet_prefill", "online_fleet_chunk"):
+        assert name in stats, name
+        s = stats[name]
+        assert set(s) == {"currsize", "maxsize", "hits", "misses",
+                          "evictions"}
+        assert 0 <= s["currsize"] <= s["maxsize"]
+
+
+def test_compile_cache_eviction_and_rehit(setup):
+    """Shrinking maxsize bounds the cache: old entries evict LRU-first and
+    a re-request after eviction rebuilds (miss) then re-hits."""
+    from repro.serve.engine import _generate_fn
+
+    cfg, params, _ = setup
+    saved_max = _generate_fn.maxsize
+    _generate_fn.clear()
+    h0, m0, e0 = (_generate_fn.hits, _generate_fn.misses,
+                  _generate_fn.evictions)
+    try:
+        _generate_fn.maxsize = 2
+        keys = [(cfg, 48, n, None) for n in (2, 3, 4)]
+        fns = [_generate_fn(*k) for k in keys]       # 3 builds into size 2
+        assert _generate_fn.misses - m0 == 3
+        assert _generate_fn.evictions - e0 == 1      # (cfg,48,2) evicted
+        assert len(_generate_fn._entries) == 2
+
+        assert _generate_fn(*keys[1]) is fns[1]      # survivor: hit
+        assert _generate_fn.hits - h0 == 1
+
+        rebuilt = _generate_fn(*keys[0])             # evicted: miss again
+        assert _generate_fn.misses - m0 == 4
+        assert rebuilt is not fns[0]
+        assert _generate_fn(*keys[0]) is rebuilt     # and re-hits
+        assert _generate_fn.hits - h0 == 2
+        assert len(_generate_fn._entries) == 2       # still bounded
+    finally:
+        _generate_fn.maxsize = saved_max
+        _generate_fn.clear()
+
+
+def test_clear_caches_drops_entries(setup):
+    from repro.serve.engine import _generate_fn, cache_stats, clear_caches
+
+    cfg, _, _ = setup
+    _generate_fn(cfg, 48, 2, None)
+    assert cache_stats()["generate"]["currsize"] >= 1
+    clear_caches()
+    assert all(s["currsize"] == 0 for s in cache_stats().values())

@@ -48,7 +48,7 @@ REQUIRED_MODULES = (
     "repro.core.scenario", "repro.core.fleet", "repro.core.policy",
     "repro.sched.workload", "repro.sched.router", "repro.sched.lifetime",
     "repro.calibrate.resilience_sweep", "repro.serve.steps",
-    "repro.kernels.ops", "repro.launch.schedule",
+    "repro.serve.online", "repro.kernels.ops", "repro.launch.schedule",
 )
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
