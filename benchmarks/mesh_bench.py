@@ -1,0 +1,174 @@
+"""Benchmark: mesh-sharded serving — one sharded dispatch, per-shard aging.
+
+Must own its process: it fakes 8 host devices via ``XLA_FLAGS`` *before*
+jax initialises (run ``PYTHONPATH=src python -m benchmarks.mesh_bench``;
+``benchmarks.run --only mesh`` shells out here for the same reason).
+
+Measures, on a reduced decoder-only config over a ``("data", "model")``
+mesh with tp=8:
+
+* **sharded vs single-device generation**: compile time, warm whole-call
+  wall, decode tokens/sec for the SAME cast params — plus the bit-exactness
+  check the serve layout guarantees (clean graphs; the full parity matrix
+  lives in ``tests/test_serve_sharded.py``).
+* **per-shard aging inside one dispatch**: a shard-granular
+  :class:`~repro.core.fleet.FleetRuntime` (``n_shards=8``) with staggered
+  shard ages served by :class:`~repro.serve.sharded.MeshServeEngine`;
+  structural guards assert the served per-shard BERs differ across shards
+  and that advancing shard ages re-jits nothing
+  (``serve.steps.TRACE_COUNTS``).
+
+On the CPU container the 8 "devices" share one physical core, so sharded
+wall-clock carries partitioning overhead rather than speedup — the numbers
+to read are compile cost, the zero-retrace property and the parity flag.
+Results are recorded to ``BENCH_mesh.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.fleet import FleetRuntime
+from repro.data import SyntheticLM
+from repro.serve import steps as serve_steps
+from repro.serve.engine import ServeEngine
+from repro.serve.sharded import MeshServeEngine
+
+from .common import check, table
+
+ARCH = "deepseek_7b"
+
+
+def _timed(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _setup(batch: int, prompt_len: int):
+    from repro.train.steps import init_train_state
+    cfg = get_config(ARCH).reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=prompt_len,
+                      global_batch=batch)
+    return cfg, params, data.batch_at(0).tokens
+
+
+def bench_sharded_dispatch(quick: bool):
+    B, S = 2, 8
+    n_steps = 4 if quick else 12
+    reps = 2
+    cfg, params, prompts = _setup(B, S)
+    max_len = S + n_steps + 1
+
+    eng = MeshServeEngine(cfg, params, max_len=max_len, seed=0)
+    tp = eng.tp
+    t0 = time.perf_counter()
+    a = eng.generate(prompts, n_steps)
+    compile_sharded = time.perf_counter() - t0
+    t_sharded = _timed(lambda: eng.generate(prompts, n_steps), reps)
+
+    host_params = jax.device_get(eng.params)
+    single = ServeEngine(cfg, host_params, max_len=max_len, seed=0)
+    t0 = time.perf_counter()
+    b = single.generate(prompts, n_steps)
+    compile_single = time.perf_counter() - t0
+    t_single = _timed(lambda: single.generate(prompts, n_steps), reps)
+
+    exact = bool(np.array_equal(a.tokens, b.tokens))
+    total = B * n_steps
+    rows = [["single-device scanned", f"{compile_single:.1f}s",
+             f"{t_single * 1e3:.0f}ms", f"{total / t_single:.0f}"],
+            [f"mesh-sharded tp={tp}", f"{compile_sharded:.1f}s",
+             f"{t_sharded * 1e3:.0f}ms", f"{total / t_sharded:.0f}"]]
+    txt = table(f"Mesh-sharded serving (clean graph, B={B}, {n_steps} "
+                "steps, 8 faked host devices)",
+                ["path", "compile", "wall", "tok/s"], rows)
+    txt += "\n" + check("sharded generation bit-exact vs single device",
+                        exact)
+    return txt, {"tp": tp, "compile_sharded_s": compile_sharded,
+                 "compile_single_s": compile_single,
+                 "sharded_tok_s": total / t_sharded,
+                 "single_tok_s": total / t_single, "bit_exact": exact}
+
+
+def bench_per_shard_aging(quick: bool):
+    B, S = 2, 8
+    n_steps = 3 if quick else 8
+    cfg, params, prompts = _setup(B, S)
+    max_len = S + n_steps + 1
+    tp = len(jax.devices())
+
+    fleet = FleetRuntime(n_devices=1, n_shards=tp)
+    for s in range(tp):
+        fleet.set_age(years=9.0 * (s + 1) / tp, shard=s)
+    eng = MeshServeEngine(cfg, params, fleet=fleet, max_len=max_len, seed=0)
+
+    t0 = time.perf_counter()
+    r1 = eng.generate(prompts, n_steps)
+    compile_s = time.perf_counter() - t0
+    before = dict(serve_steps.TRACE_COUNTS)
+    fleet.advance(3.15e7, shard=1)               # one shard ages a year
+    r2 = eng.generate(prompts, n_steps)
+    zero_retrace = dict(serve_steps.TRACE_COUNTS) == before
+    t_warm = _timed(lambda: eng.generate(prompts, n_steps), 2)
+
+    shard_bers_differ = bool(len(np.unique(r1.bers[:, 0])) > 1)
+    rows = [[f"per-shard faulted tp={tp}", f"{compile_s:.1f}s",
+             f"{t_warm * 1e3:.0f}ms", f"{B * n_steps / t_warm:.0f}"]]
+    txt = table("Per-shard aging inside ONE sharded dispatch",
+                ["path", "compile", "wall", "tok/s"], rows)
+    txt += "\n" + check("served per-shard BERs differ across mesh shards",
+                        shard_bers_differ,
+                        f"BER(q) spread {r1.bers[:, 0].min():.1e} -> "
+                        f"{r1.bers[:, 0].max():.1e}")
+    txt += "\n" + check("shard age advance + BER update re-jits nothing",
+                        zero_retrace)
+    return txt, {"compile_s": compile_s,
+                 "warm_tok_s": B * n_steps / t_warm,
+                 "shard_bers_differ": shard_bers_differ,
+                 "zero_retrace": zero_retrace,
+                 "ber_q_per_shard": r1.bers[:, 0].tolist(),
+                 "tokens_changed_after_aging":
+                     bool(not np.array_equal(r1.tokens, r2.tokens))}
+
+
+def run(quick: bool = False) -> str:
+    assert len(jax.devices()) >= 2, \
+        "mesh_bench needs faked host devices; run it as its own process"
+    txt1, disp = bench_sharded_dispatch(quick)
+    txt2, aging = bench_per_shard_aging(quick)
+    out = "\n".join([txt1, txt2])
+
+    record = {"arch": ARCH, "mode": "quick" if quick else "full",
+              "backend": jax.default_backend(),
+              "n_devices": len(jax.devices()),
+              "dispatch": disp, "per_shard_aging": aging}
+    path = Path(__file__).resolve().parent.parent / "BENCH_mesh.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    out += f"\n[recorded] {path.name}"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(out)
+    if "[FAIL]" in out:
+        raise SystemExit(1)

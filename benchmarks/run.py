@@ -9,7 +9,22 @@ import sys
 import time
 
 SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched", "kernels",
-            "serve", "online", "resilience", "fig1b", "roofline")
+            "serve", "online", "mesh", "resilience", "fig1b", "roofline")
+
+
+def _run_mesh_subprocess() -> str:
+    """mesh_bench fakes 8 host devices via XLA_FLAGS, which jax only reads
+    at init — so it must own a fresh process."""
+    import os
+    import subprocess
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.mesh_bench", "--quick"],
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return proc.stdout.rstrip()
 
 
 def main():
@@ -44,6 +59,8 @@ def main():
     if "online" in want:
         from . import online_bench
         runners["online"] = online_bench.run
+    if "mesh" in want:
+        runners["mesh"] = _run_mesh_subprocess
     if "resilience" in want:
         from . import resilience_bench
         runners["resilience"] = resilience_bench.run

@@ -14,6 +14,17 @@ profiles (a ``(N,)``-batched scenario — heterogeneous duty/temperature/budget
 fleets, cf. workload-dependent stress in *Long-Term and Short-Term
 Transistor Aging in DNNs*).
 
+With ``n_shards=S > 1`` every device is further split into S *mesh shards*
+— the tensor-parallel partitions of :class:`repro.serve.sharded`'s
+mesh-sharded serving engine, each an independently aging silicon unit.
+Internally the fleet is simply ``N*S`` aging units (device-major:
+device ``d``'s shards are units ``d*S .. d*S+S-1``); all the vectorised
+machinery is unchanged.  ``op_ber_shard_array`` exposes the ``(N, S, O)``
+view the sharded engine folds into its one dispatch;
+``op_ber_array``/``op_bers`` collapse shards with a per-domain **max**
+(a domain is only as reliable as its worst shard) so every existing
+device-granular consumer stays meaningful.
+
 :meth:`device` returns a :class:`DeviceView` exposing the legacy single-
 device protocol (``op_bers``, ``domain_state``, ``total_power``, ...), which
 is what :class:`repro.serve.engine.ServeEngine` consumes.
@@ -48,7 +59,8 @@ class DomainState:
 
 @dataclasses.dataclass(frozen=True)
 class FleetState:
-    """Snapshot of the whole fleet; every field has shape ``(N, O)``."""
+    """Snapshot of the whole fleet; every field has shape ``(N*S, O)``
+    (aging units x operators; units == devices when unsharded)."""
     v_dd: np.ndarray
     delay: np.ndarray
     dvth_p_mv: np.ndarray
@@ -71,7 +83,7 @@ class FleetRuntime:
     """N aging accelerators x O operator voltage domains, fully vectorised."""
 
     def __init__(self, cal: Optional[Calibration] = None, *,
-                 n_devices: int = 1,
+                 n_devices: int = 1, n_shards: int = 1,
                  scenario: Optional[Scenario] = None,
                  policy: Policy | str = "fault_tolerant",
                  max_loss_pct: float = DEFAULT_MAX_LOSS_PCT,
@@ -111,12 +123,25 @@ class FleetRuntime:
             n_devices = sbatch[0]
         self.scenario = scenario
         self.n_devices = int(n_devices)
+        self.n_shards = int(n_shards)
+        assert self.n_shards >= 1
+        self._n_units = self.n_devices * self.n_shards
         self._scenario_batched = bool(sbatch)
+        if sbatch and self.n_shards > 1:
+            # unit-granular scenario: every shard of a device inherits the
+            # device's mission profile (device-major repeat)
+            self._unit_scenario = scenario.map_leaves(
+                lambda v: np.repeat(np.asarray(v), self.n_shards, axis=0)
+                if np.ndim(v) else v)
+        else:
+            self._unit_scenario = scenario
         # power model referenced once here — never rebuilt per lookup
         self._power = self.cal.power
-        self._ages_s = np.zeros(self.n_devices, np.float64)
+        self._ages_s = np.zeros(self._n_units, np.float64)
         self._traj: Optional[LifetimeTrajectory] = None
         self._snap: Optional[FleetState] = None     # cache, keyed on ages
+        self._ber_jax = None                 # cached jnp views of snapshot
+        self._ber_shard_jax = None
 
     @classmethod
     def for_model(cls, cfg, **kw) -> "FleetRuntime":
@@ -138,19 +163,19 @@ class FleetRuntime:
 
     # ------------------------------------------------------------------ #
     def _ensure_trajs(self) -> LifetimeTrajectory:
-        """All N x O trajectories from one vmapped scan, as (N, O, T) views."""
+        """All units x O trajectories from one vmapped scan, (N*S, O, T)."""
         if self._traj is None:
-            dmax = self.policy.thresholds(self.scenario, self.operators)
+            dmax = self.policy.thresholds(self._unit_scenario, self.operators)
             traj: LifetimeTrajectory = simulate(
                 self.cal.aging, self.cal.delay_poly,
-                self.scenario.expand_dims(-1), delay_max=dmax)
+                self._unit_scenario.expand_dims(-1), delay_max=dmax)
             O = len(self.operators)
             out = {}
             for k, v in traj.to_dict().items():
                 v = np.asarray(v)
                 tail = v.shape[(1 if self._scenario_batched else 0) + 1:]
-                # scalar scenario: (O, T...) -> broadcast view (N, O, T...)
-                target = (self.n_devices, O) + tail
+                # scalar scenario: (O, T...) -> broadcast view (N*S, O, T...)
+                target = (self._n_units, O) + tail
                 out[k] = v if self._scenario_batched \
                     else np.broadcast_to(v, target)
             self._traj = LifetimeTrajectory(**out)
@@ -203,16 +228,19 @@ class FleetRuntime:
 
         if util_trace is not None:
             util_trace = np.asarray(util_trace, np.float32)
+            if self.n_shards > 1 and util_trace.shape[-1] == self.n_devices:
+                # device-granular duty replayed onto every shard of it
+                util_trace = np.repeat(util_trace, self.n_shards, axis=-1)
             n_epochs = util_trace.shape[0]
             if loads is None:
                 loads = util_trace.sum(axis=-1)
         elif loads is None:
             wl = workload if isinstance(workload, Workload) else \
-                get_workload(workload, n_devices=self.n_devices,
+                get_workload(workload, n_devices=self._n_units,
                              utilization=utilization, n_epochs=n_epochs)
             loads = wl.loads(key)
         loads = np.asarray(loads, np.float32)
-        dmax = self.policy.thresholds(self.scenario, self.operators)
+        dmax = self.policy.thresholds(self._unit_scenario, self.operators)
 
         dv0 = v0 = None
         if np.any(self._ages_s > 0):        # resume from the aged state
@@ -229,40 +257,60 @@ class FleetRuntime:
         kw = {} if heat_per_util is None else \
             {"heat_per_util": heat_per_util}
         cos = sched_lifetime.cosimulate(
-            self.cal.aging, self.cal.delay_poly, self.scenario, dmax,
+            self.cal.aging, self.cal.delay_poly, self._unit_scenario, dmax,
             loads, router=router, util_trace=util_trace,
-            n_devices=self.n_devices,
+            n_devices=self._n_units,
             epoch_s=horizon_s / loads.shape[0], capacity=capacity,
             dv0=dv0, v0=v0, **kw)
         self._traj = cos.as_lifetime_trajectory()
-        self._snap = None
+        self._invalidate()
         # service-time clock, positioned at the end of the routed horizon
         self._ages_s[:] = float(np.asarray(cos.t)[-1])
         self.last_cosim = cos
         return cos
 
     # ------------------------------------------------------------------ #
-    def set_age(self, *, years=None, seconds=None, device=None):
-        """Set the simulated age of one device (or the whole fleet)."""
+    def _invalidate(self):
+        self._snap = None
+        self._ber_jax = None
+        self._ber_shard_jax = None
+
+    def _unit_sel(self, device, shard):
+        """ndarray index selecting the addressed aging units."""
+        S = self.n_shards
+        if device is None:
+            return slice(None) if shard is None else slice(shard, None, S)
+        if shard is None:
+            return slice(device * S, (device + 1) * S)
+        return device * S + shard
+
+    def set_age(self, *, years=None, seconds=None, device=None, shard=None):
+        """Set the simulated age of one device/shard (or the whole fleet).
+
+        ``shard`` addresses one mesh shard within ``device`` (or that shard
+        index across every device when ``device is None``)."""
         assert (years is None) != (seconds is None)
         age = float(seconds if seconds is not None
                     else years * SECONDS_PER_YEAR)
-        if device is None:
-            self._ages_s[:] = age
-        else:
-            self._ages_s[device] = age
-        self._snap = None
+        self._ages_s[self._unit_sel(device, shard)] = age
+        self._invalidate()
 
-    def advance(self, seconds, device=None):
-        if device is None:
+    def advance(self, seconds, device=None, shard=None):
+        sel = self._unit_sel(device, shard)
+        if device is None and shard is None:
             self._ages_s += np.asarray(seconds, np.float64)
         else:
-            self._ages_s[device] += float(seconds)
-        self._snap = None
+            self._ages_s[sel] = self._ages_s[sel] + np.asarray(
+                seconds, np.float64)
+        self._invalidate()
 
     @property
     def ages_years(self) -> np.ndarray:
-        return self._ages_s / SECONDS_PER_YEAR
+        """(N,) device ages — or (N, S) per-shard ages when sharded."""
+        yrs = self._ages_s / SECONDS_PER_YEAR
+        if self.n_shards == 1:
+            return yrs
+        return yrs.reshape(self.n_devices, self.n_shards)
 
     @property
     def age_years(self) -> float:
@@ -276,7 +324,7 @@ class FleetRuntime:
         return self._ensure_trajs().age_index(self._ages_s[:, None])
 
     def snapshot(self) -> FleetState:
-        """Current state of every (device, operator) domain: (N, O) arrays.
+        """Current state of every (unit, operator) domain: (N*S, O) arrays.
 
         Cached between age changes — per-domain accessors (``op_ber``,
         ``total_power``, ...) share one fleet-wide computation."""
@@ -297,14 +345,20 @@ class FleetRuntime:
     def op_index(self, op: str) -> int:
         return self.operators.index(op)
 
-    def domain_state(self, op: str, device: int = 0) -> DomainState:
-        return self.snapshot().domain(device, self.op_index(op))
+    def domain_state(self, op: str, device: int = 0,
+                     shard: int = 0) -> DomainState:
+        return self.snapshot().domain(device * self.n_shards + shard,
+                                      self.op_index(op))
 
-    def op_ber(self, op: str, device: int = 0) -> float:
-        return float(self.snapshot().ber[device, self.op_index(op)])
+    def op_ber(self, op: str, device: int = 0, shard=None) -> float:
+        return self.op_bers(device, shard)[op]
 
-    def op_bers(self, device: int = 0) -> Dict[str, float]:
-        ber = self.snapshot().ber[device]
+    def op_bers(self, device: int = 0, shard=None) -> Dict[str, float]:
+        """Per-operator BERs of one device (worst shard) or one shard."""
+        if shard is None and self.n_shards > 1:
+            ber = self.op_ber_array()[device]
+        else:
+            ber = self.snapshot().ber[device * self.n_shards + (shard or 0)]
         return {op: float(ber[i]) for i, op in enumerate(self.operators)}
 
     def op_ber_array(self) -> np.ndarray:
@@ -312,19 +366,57 @@ class FleetRuntime:
 
         The array-native accessor the fleet serving engine consumes: one
         snapshot hands every lane its per-operator BER vector without N x O
-        scalar ``DeviceView`` round-trips."""
-        return self.snapshot().ber
+        scalar ``DeviceView`` round-trips.  When sharded (S > 1) each
+        device's row is the per-domain **max over its shards** — the rate a
+        shard-oblivious consumer must assume."""
+        ber = self.snapshot().ber
+        if self.n_shards == 1:
+            return ber
+        return ber.reshape(self.n_devices, self.n_shards, -1).max(axis=1)
+
+    def op_ber_shard_array(self) -> np.ndarray:
+        """(N, S, O) per-shard BER tensor — the mesh engine's native view."""
+        return self.snapshot().ber.reshape(
+            self.n_devices, self.n_shards, len(self.operators))
+
+    def op_ber_jax(self):
+        """(N, O) BERs as a cached ``jnp.float32`` array.
+
+        jax-native twin of :meth:`op_ber_array` for consumers that feed the
+        BERs straight into a jitted graph as a *traced leaf*: the
+        device_put happens once per age change, not once per generate
+        call, and no host numpy round-trip sits on the serve hot path."""
+        if self._ber_jax is None:
+            import jax.numpy as jnp
+            self._ber_jax = jnp.asarray(self.op_ber_array(), jnp.float32)
+        return self._ber_jax
+
+    def op_ber_shard_jax(self):
+        """(N, S, O) per-shard BERs as a cached ``jnp.float32`` array."""
+        if self._ber_shard_jax is None:
+            import jax.numpy as jnp
+            self._ber_shard_jax = jnp.asarray(self.op_ber_shard_array(),
+                                              jnp.float32)
+        return self._ber_shard_jax
 
     def total_power(self, device: int = 0) -> float:
-        return float(self.snapshot().power_w[device].sum())
+        return float(self.fleet_power()[device])
 
     def fleet_power(self) -> np.ndarray:
-        """Per-device array power [W], shape (N,)."""
-        return self.snapshot().power_w.sum(axis=-1)
+        """Per-device array power [W], shape (N,).
 
-    def summary(self, device: int = 0) -> Mapping[str, Dict]:
+        Sharded fleets average the shard-domain voltages' array power —
+        each shard is 1/S of the physical array, so the device draws the
+        mean of the per-shard whole-array figures."""
+        p = self.snapshot().power_w.sum(axis=-1)
+        if self.n_shards == 1:
+            return p
+        return p.reshape(self.n_devices, self.n_shards).mean(axis=-1)
+
+    def summary(self, device: int = 0, shard: int = 0) -> Mapping[str, Dict]:
         s = self.snapshot()
-        return {op: dataclasses.asdict(s.domain(device, i))
+        unit = device * self.n_shards + shard
+        return {op: dataclasses.asdict(s.domain(unit, i))
                 for i, op in enumerate(self.operators)}
 
     def device(self, i: int = 0) -> "DeviceView":
@@ -354,7 +446,8 @@ class DeviceView:
 
     @property
     def age_years(self) -> float:
-        return float(self.fleet.ages_years[self.index])
+        return float(self.fleet._ages_s[
+            self.index * self.fleet.n_shards]) / SECONDS_PER_YEAR
 
     def set_age(self, *, years=None, seconds=None):
         self.fleet.set_age(years=years, seconds=seconds, device=self.index)

@@ -1,8 +1,10 @@
 """Distribution layer: sharding rules, compressed collectives, elasticity."""
-from .sharding import (batch_spec, cache_specs, data_axes, input_shardings,
-                       param_specs, shard_tree, state_specs)
+from .sharding import (batch_spec, cache_specs, constrain_replicated,
+                       data_axes, input_shardings, param_specs,
+                       serve_mesh_scope, shard_tree, state_specs)
 
 __all__ = [
-    "batch_spec", "cache_specs", "data_axes", "input_shardings",
-    "param_specs", "shard_tree", "state_specs",
+    "batch_spec", "cache_specs", "constrain_replicated", "data_axes",
+    "input_shardings", "param_specs", "serve_mesh_scope", "shard_tree",
+    "state_specs",
 ]

@@ -43,11 +43,15 @@ def psum_compressed_leaf(g: jax.Array, residual: jax.Array,
     """
     gf = g.astype(jnp.float32) + residual
     q, scale = quantize_int8_global(gf)
-    new_residual = gf - q.astype(jnp.float32) * scale
     # int8 payload summed in int32 (shards * 127 << 2^31); per-shard scales
-    # averaged — the residual absorbs the shared-scale mismatch next round.
+    # averaged.  The residual is taken against the *transmitted*
+    # representation q * smean — not the local q * scale — so the
+    # shared-scale mismatch enters the feedback loop too; against the local
+    # scale it would be a systematic bias the residual never corrects
+    # (tests/test_distributed_direct.py locks the convergence down).
     qsum = jax.lax.psum(q.astype(jnp.int32), axis_names)
     smean = jax.lax.psum(scale, axis_names) / n_shards
+    new_residual = gf - q.astype(jnp.float32) * smean
     out = qsum.astype(jnp.float32) * smean / n_shards
     return out.astype(g.dtype), new_residual
 

@@ -49,16 +49,29 @@ def plan_remesh(old_mesh: Mesh, new_n_devices: int, *, global_batch: int,
                          f"model={model}")
     new_dp = new_n_devices // model
     old_dp = int(np.prod([old_mesh.shape[a] for a in names if a != "model"]))
-    tokens_per_dp = global_batch * old_microbatches // max(old_dp, 1)
     if global_batch % new_dp != 0:
         # shrink dp to the largest divisor of global_batch
         while new_dp > 1 and global_batch % new_dp != 0:
             new_dp -= 1
     new_micro = max(1, (old_dp * old_microbatches) // new_dp)
-    new_shape = tuple(new_dp if a == "data" else
-                      (model if a == "model" else 1) for a in names
-                      if a in ("data", "model"))
-    new_names = tuple(a for a in names if a in ("data", "model"))
+    # Preserve EVERY old axis name: steps and batch specs compiled against
+    # a ("pod", "data", "model") mesh reference the "pod" axis by name, so
+    # dropping it from the plan would make the resharded state unusable
+    # without a from-scratch retrace.  The pod axis keeps whole pods when
+    # the new DP degree still fills them, else collapses to size 1.
+    if "pod" in names:
+        per_pod_dp = old_mesh.shape["data"]
+        if new_dp % per_pod_dp == 0:
+            sizes = {"pod": new_dp // per_pod_dp, "data": per_pod_dp,
+                     "model": model}
+        else:
+            sizes = {"pod": 1, "data": new_dp, "model": model}
+        new_shape = tuple(sizes[a] for a in names)
+        new_names = names
+    else:
+        new_shape = tuple(new_dp if a == "data" else model
+                          for a in names if a in ("data", "model"))
+        new_names = tuple(a for a in names if a in ("data", "model"))
     return RemeshPlan(tuple(old_mesh.shape[a] for a in names), new_shape,
                       new_names, new_micro)
 

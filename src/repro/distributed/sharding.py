@@ -22,9 +22,30 @@ Divisibility-aware fallbacks (recorded in DESIGN.md Sec. 5):
 
 Every ``d_ff`` and MoE expert count in the assigned pool divides tp = 16, so
 FFN/expert sharding never falls back.
+
+Two layouts share the rule machinery (``layout=`` on :func:`param_pspec`):
+
+* ``"train"`` (default) — the Megatron-style rules above: row-parallel
+  ``wo``/``w_down`` contract a sharded dim and rely on a psum, which
+  reorders the float reduction.  Maximum-bandwidth, NOT bit-reproducible
+  against a single device.
+* ``"serve"`` — the exact-TP layout the mesh serving engine uses
+  (DESIGN.md §Sharded-Serving): weights shard ONLY on output
+  (non-contraction) dims — head axis for ``wq/wk/wv``, ``d_model`` for
+  ``wo``/``w_down``, vocab for the (possibly tied) head, the expert axis
+  for MoE — and every fallback *replicates* instead of contraction- or
+  sequence-sharding.  Activations are pinned replicated over ``"model"``
+  at op boundaries (:func:`constrain_replicated` under
+  :func:`serve_mesh_scope`), so each shard computes full-contraction
+  column slices and every collective is an all-gather: pure data
+  movement, no float-reduction reorder.  Sharded generation is therefore
+  bit-exact vs the single-device scanned path (locked down by
+  ``tests/test_serve_sharded.py``; int8 x int8 -> int32 faulted
+  accumulation is associative and stays exact under any split).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -96,6 +117,50 @@ def _base_spec(name: str, base_ndim: int, cfg: ModelConfig, tp: int):
     return None                                   # replicate (norms, vectors…)
 
 
+def _serve_base_spec(name: str, base_ndim: int, cfg: ModelConfig, tp: int):
+    """Exact-TP serve layout: shard output dims only, replicate fallbacks.
+
+    Returning ``None`` replicates the leaf.  Divisibility of the chosen
+    dim is re-checked generically in :func:`param_pspec` (mismatch ->
+    replicate), so e.g. ``wo (H, hd, d)`` only d-shards when d % tp == 0.
+    """
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    head_ok = H > 0 and H % tp == 0
+    kv_ok = KV > 0 and KV % tp == 0
+    vocab_ok = cfg.vocab % tp == 0
+
+    if name == "wq":
+        return (None, MODEL_AXIS, None) if head_ok else None
+    if name in ("wk", "wv"):
+        return (None, MODEL_AXIS, None) if kv_ok else None
+    if name == "wo":                              # (H, hd, d): output d
+        return (None, None, MODEL_AXIS)
+    if name in ("w_gate", "w_up"):
+        if base_ndim == 3:                        # MoE (E, d, f): experts
+            return (MODEL_AXIS, None, None)       # are independent -> exact
+        return (None, MODEL_AXIS)
+    if name == "w_down":
+        if base_ndim == 3:                        # (E, f, d)
+            return (MODEL_AXIS, None, None)
+        return (None, MODEL_AXIS)                 # (f, d): output d
+    if name in ("w_in", "w_x", "w_a", "w_i", "w_r", "w_k", "w_v", "w_g",
+                "w_out", "w_o"):
+        return (None, MODEL_AXIS)                 # all column-parallel
+    if name == "embed":
+        # vocab-sharded: the row gather adds zeros from non-owner shards
+        # (exact) and the tied unembed becomes column-parallel (exact).
+        if vocab_ok:
+            return (MODEL_AXIS, None)
+        # non-divisible vocab: d-shard the lookup only; a tied head would
+        # contract the sharded d -> replicate instead
+        return None if cfg.tie_embeddings else (None, MODEL_AXIS)
+    if name == "lm_head":
+        return (None, MODEL_AXIS) if vocab_ok else None
+    if name in ("prefix_proj", "dec_pos"):
+        return (None, MODEL_AXIS)
+    return None                                   # replicate (norms, router…)
+
+
 def _path_names(path) -> Tuple[str, ...]:
     out = []
     for e in path:
@@ -111,7 +176,7 @@ def _path_names(path) -> Tuple[str, ...]:
 
 
 def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh, *,
-                fsdp: bool = False) -> P:
+                fsdp: bool = False, layout: str = "train") -> P:
     """PartitionSpec for one parameter leaf, by path name + rank.
 
     ``fsdp=True`` additionally shards every >=2-D weight over the data
@@ -121,6 +186,10 @@ def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh, *,
     degree at the cost of a per-layer weight all-gather (the trade the
     collective roofline term makes visible; required for arctic/qwen3 train
     cells to fit HBM — DESIGN.md Sec. 5).
+
+    ``layout="serve"`` selects the exact-TP rules (:func:`_serve_base_spec`
+    — output-dim sharding only, replicated fallbacks), the layout whose
+    sharded generation is bit-exact vs a single device.
     """
     tp = _tp(mesh)
     if tp == 1 and not fsdp:
@@ -134,7 +203,8 @@ def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh, *,
     n_stack = sum(1 for n in names if n in ("groups", "enc_layers",
                                             "dec_layers"))
     base_ndim = ndim - n_stack
-    base = _base_spec(name, base_ndim, cfg, tp) if tp > 1 else None
+    rule = _serve_base_spec if layout == "serve" else _base_spec
+    base = rule(name, base_ndim, cfg, tp) if tp > 1 else None
     if base is None or len(base) != base_ndim:
         base = (None,) * base_ndim
     # verify divisibility of the sharded dim; replicate on mismatch
@@ -157,10 +227,11 @@ def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh, *,
 
 
 def param_specs(abstract_params, cfg: ModelConfig, mesh: Mesh, *,
-                fsdp: bool = False):
+                fsdp: bool = False, layout: str = "train"):
     """Pytree of PartitionSpec matching an (abstract) param tree."""
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: param_pspec(path, leaf, cfg, mesh, fsdp=fsdp),
+        lambda path, leaf: param_pspec(path, leaf, cfg, mesh, fsdp=fsdp,
+                                       layout=layout),
         abstract_params)
 
 
@@ -309,4 +380,45 @@ def constrain_activation(x):
     """Apply the configured (batch, None, None) constraint to (B, S, d)."""
     if _ACTIVATION_SHARDING is not None and getattr(x, "ndim", 0) == 3:
         return jax.lax.with_sharding_constraint(x, _ACTIVATION_SHARDING)
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# serve-mesh context: exact-TP activation pinning (DESIGN.md §Sharded-Serving)
+# --------------------------------------------------------------------------- #
+# While a serve mesh is in scope (the MeshServeEngine enters it around the
+# trace of its generate function), every op-boundary output in the model
+# (op_linear / op_einsum / op_batched_matmul, the embedding gather, the
+# unembed, the MoE expert buffers) is pinned REPLICATED over "model" via
+# with_sharding_constraint.  Combined with the output-dim-only serve param
+# layout this guarantees no float contraction ever spans shards: each
+# device computes exact column slices of every matmul and GSPMD's only
+# collectives are all-gathers (exact data movement) — the property the
+# sharded-vs-single-device bit-exactness tests rely on.  Outside the scope
+# (the default) the hook is a no-op, so train/dry-run graphs are untouched.
+_SERVE_MESH: Optional[Mesh] = None
+
+
+def serve_mesh_active() -> Optional[Mesh]:
+    """The mesh of the enclosing :func:`serve_mesh_scope`, if any."""
+    return _SERVE_MESH
+
+
+@contextlib.contextmanager
+def serve_mesh_scope(mesh: Optional[Mesh]):
+    """Trace-time scope enabling the exact-TP activation constraints."""
+    global _SERVE_MESH
+    prev = _SERVE_MESH
+    _SERVE_MESH = mesh
+    try:
+        yield
+    finally:
+        _SERVE_MESH = prev
+
+
+def constrain_replicated(x):
+    """Pin ``x`` replicated over the serve mesh (no-op outside the scope)."""
+    if _SERVE_MESH is not None and getattr(x, "ndim", 0) >= 1:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_SERVE_MESH, P()))
     return x

@@ -125,6 +125,42 @@ def inject_bitflips_ref(x: jax.Array, ber, key: jax.Array) -> jax.Array:
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
+def shard_slices(n: int, n_shards: int) -> list:
+    """Split points assigning ``n`` columns/heads to shards: shard ``s``
+    owns ``[s*n//S, (s+1)*n//S)`` — for divisible ``n`` this is exactly the
+    contiguous equal-block assignment ``NamedSharding`` uses, and for
+    ``n < S`` trailing shards own empty blocks (they hold no heads)."""
+    return [s * n // n_shards for s in range(1, n_shards)]
+
+
+def inject_bitflips_sharded(x: jax.Array, bers, key: jax.Array, *,
+                            axis: int = -1) -> jax.Array:
+    """Per-shard accumulator upsets: block ``s`` of ``axis`` flips at
+    ``bers[s]`` with a shard-distinct stream.
+
+    ``bers`` is an ``(S,)`` vector — one BER per mesh shard of the serve
+    layout (each shard of the weight's output dim is a physically distinct
+    array region with its own ΔVth history).  The base seed is hashed from
+    ``key`` once and each shard's stream is an fmix32 fold
+    (``fold_seed(base, s)`` — the same stream derivation the fused kernel
+    applies per tile), expanded over that block's own (R, 128) word layout
+    by the jnp oracle.  Everything is plain jnp, so the op partitions
+    under GSPMD and a hand-built reference (slice -> fold ->
+    :func:`inject_bitflips_ref` -> concat) reproduces it exactly
+    (``tests/test_serve_sharded.py``).
+    """
+    bers = jnp.asarray(bers, jnp.float32)
+    S = int(bers.shape[0])
+    if S == 1:
+        return inject_bitflips_ref(x, bers[0], key)
+    base = seed_from_key(key)
+    blocks = jnp.split(x, shard_slices(x.shape[axis], S), axis=axis)
+    out = [inject_bitflips_ref(blk, bers[s],
+                               jax.random.PRNGKey(fold_seed(base, s)))
+           for s, blk in enumerate(blocks)]
+    return jnp.concatenate(out, axis=axis)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def fused_aged_matmul(a: jax.Array, b: jax.Array,
                       xs: jax.Array | None = None,
@@ -203,7 +239,16 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
     randoms, no int32 HBM round-trip.  ``fused=False`` keeps the original
     three-pass route (matmul -> ``make_flip_randoms`` -> ``bitflip_words``),
     retained as the oracle / fallback path.
+
+    ``ber`` may be an ``(S,)`` per-shard vector (mesh serving): the matmul
+    then stays on the pure-jnp route (a ``pallas_call`` is a single-device
+    program and does not partition under GSPMD) and the accumulator's
+    output-column blocks are flipped per shard via
+    :func:`inject_bitflips_sharded`.
     """
+    sharded = jnp.ndim(ber) == 1
+    if sharded:
+        use_kernel = fused = False
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
@@ -223,9 +268,12 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
     if inject:
         if key is None:
             key = jax.random.PRNGKey(seed)
-        # kernel-free route stays kernel-free: the jnp oracle injection is
-        # bit-exact vs the Pallas kernel and vmap-friendly
-        acc = (inject_bitflips(acc, ber, key, interpret=interpret)
-               if use_kernel else inject_bitflips_ref(acc, ber, key))
+        if sharded:
+            acc = inject_bitflips_sharded(acc, ber, key)
+        else:
+            # kernel-free route stays kernel-free: the jnp oracle injection
+            # is bit-exact vs the Pallas kernel and vmap-friendly
+            acc = (inject_bitflips(acc, ber, key, interpret=interpret)
+                   if use_kernel else inject_bitflips_ref(acc, ber, key))
     out = acc.astype(jnp.float32) * xs * ws
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)

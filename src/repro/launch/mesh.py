@@ -23,3 +23,15 @@ def make_local_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serve_mesh(tp: int | None = None):
+    """Tensor-parallel serving mesh: ``("data", "model")`` with model=tp.
+
+    Default tp: every visible device (the single-replica big-model case
+    ``repro.serve.sharded.MeshServeEngine`` targets).
+    """
+    n = len(jax.devices())
+    tp = n if tp is None else int(tp)
+    assert n % tp == 0, (n, tp)
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

@@ -20,6 +20,14 @@ served reflect the traffic-dependent wear.  ``--router static`` keeps
 the legacy fixed-profile aging; ``wear_level`` demonstrates the
 scheduler actively slowing fleet aging (``python -m
 repro.launch.schedule`` for the router comparison).
+
+``--mesh`` serves ONE model sharded over a ``("data", "model")`` device
+mesh instead of a fleet of replicas: tensor/expert parallelism over
+``--tp`` devices (default: all visible — fake them on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* launch),
+with a shard-granular fleet (``n_shards == tp``) giving every mesh shard
+its own staggered age and per-operator BERs inside the single sharded
+dispatch (:class:`repro.serve.sharded.MeshServeEngine`).
 """
 from __future__ import annotations
 
@@ -94,6 +102,13 @@ def main(argv=None):
                          "repro.launch.calibrate_resilience)")
     ap.add_argument("--baseline-avs", action="store_true",
                     help="legacy alias for --policy baseline")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve ONE mesh-sharded model (tensor/expert "
+                         "parallel over --tp devices) with per-shard "
+                         "aging instead of a fleet of replicas")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="--mesh model-axis size (default: all visible "
+                         "devices)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run weight matmuls through the int8 systolic "
                          "Pallas kernel (interpret mode on CPU: slow)")
@@ -113,6 +128,8 @@ def main(argv=None):
         from repro.core.policy import MeasuredResiliencePolicy
         pol = MeasuredResiliencePolicy(ber_model=load_calibration().ber,
                                        model=args.arch)
+    if args.mesh:
+        return _run_mesh(args, cfg, params, pol)
     fleet = FleetRuntime(
         n_devices=args.n_devices, policy=pol, max_loss_pct=args.budget)
     for i in range(args.n_devices):
@@ -189,6 +206,60 @@ def main(argv=None):
         f"{k}={v:.1e}" for k, v in sorted(res.bers.items())))
     print(f"[serve] est. array power: {res.power_w:.2f} W "
           f"(x{len(res.bers)} domains)")
+    print(f"[serve] generated {res.tokens.shape} tokens; "
+          f"first row: {res.tokens[0][:12].tolist()}")
+    return res
+
+
+def _run_mesh(args, cfg, params, pol):
+    """One mesh-sharded model, per-shard aging, ONE sharded dispatch."""
+    from repro.serve.sharded import MeshServeEngine, default_serve_mesh
+
+    mesh = default_serve_mesh(args.tp)
+    tp = mesh.shape["model"]
+    fleet = FleetRuntime(n_devices=1, n_shards=tp, policy=pol,
+                         max_loss_pct=args.budget)
+    for s in range(tp):
+        # staggered shard ages: a device rebuilt from spares of mixed age
+        fleet.set_age(years=args.age_years * (s + 1) / tp, shard=s)
+    if args.router != "static":
+        cos = fleet.apply_load(workload=args.workload, router=args.router,
+                               utilization=args.utilization,
+                               horizon_s=args.horizon_years * YEAR_S)
+        wear = cos.device_wear()[-1]
+        print(f"[serve] routed {args.horizon_years:g}y of {args.workload} "
+              f"traffic over the {tp} shards via {args.router}: max ΔVth "
+              f"{wear.max():.1f} mV (spread "
+              f"{wear.max() - wear.min():.1f} mV)")
+
+    max_len = args.prompt_len + args.gen_len + 1
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len,
+                       global_batch=args.batch)
+    prompts = data.batch_at(0).tokens
+    extra = {}
+    if cfg.prefix_tokens:
+        extra["prefix_embeds"] = np.zeros(
+            (args.batch, cfg.prefix_tokens, cfg.d_model), np.float32)
+    if cfg.n_encoder_layers:
+        extra["frames"] = np.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
+
+    engine = MeshServeEngine(cfg, params, mesh=mesh, fleet=fleet,
+                             max_len=max_len)
+    res = engine.generate(prompts, args.gen_len,
+                          temperature=args.temperature, top_k=args.top_k,
+                          **extra)
+    pol_name = getattr(fleet.policy, "name", "fault_tolerant")
+    ages = ", ".join(f"{a:.1f}y" for a in res.ages_years)
+    print(f"[serve] arch={cfg.name} mesh tp={tp} policy={pol_name} "
+          f"budget={args.budget}% — ONE sharded dispatch, per-shard aging")
+    print(f"[serve] shard ages: [{ages}]  device power: {res.power_w:.2f} W")
+    print("[serve] per-shard BER table (rows=shards):")
+    head = "         " + " ".join(f"{op:>8s}" for op in res.operators)
+    print(head)
+    for s in range(res.bers.shape[0]):
+        row = " ".join(f"{b:8.1e}" for b in res.bers[s])
+        print(f"  shard{s} {row}")
     print(f"[serve] generated {res.tokens.shape} tokens; "
           f"first row: {res.tokens[0][:12].tolist()}")
     return res

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
+from repro.distributed.sharding import constrain_replicated
 from . import attention as attn_lib
 from .layers import (FaultConfig, init_norm, layer_norm, mlp_apply, mlp_init,
                      norm, op_einsum, sinusoid_positions)
@@ -179,7 +180,8 @@ def decode(params, cfg: ModelConfig, tokens, enc_out=None, kv=None, *,
         step, x, (params["dec_layers"], kv, dummy_cache,
                   jnp.arange(cfg.n_layers)), cfg.n_layers)
     x = norm(x, params["final_norm"], cfg.norm)
-    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = constrain_replicated(
+        (x @ params["lm_head"]).astype(jnp.float32))
     return logits, (new_cache if cache is not None else None)
 
 

@@ -16,6 +16,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain_replicated
 from repro.kernels import ops as kops
 
 
@@ -40,7 +41,7 @@ class FaultConfig:
     in-trace integer mixing (:func:`repro.kernels.ops.fold_seed` on the
     fused path), with no materialised randoms and no per-step retrace.
     """
-    bers: Dict[str, jax.Array]          # op name -> scalar BER
+    bers: Dict[str, jax.Array]          # op -> BER (scalar or (S,) per-shard)
     key: jax.Array                      # base PRNG key
     seeds: Optional[Dict[str, jax.Array]] = None  # op -> int32 stream base
     step: jax.Array | int = 0           # decode-step index (folded in-trace)
@@ -96,17 +97,26 @@ def _op_salt(op: str) -> int:
 
 def op_linear(x: jax.Array, w: jax.Array, op: str,
               fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
-    """``x (..., K) @ w (K, N)`` through the operator domain ``op``."""
+    """``x (..., K) @ w (K, N)`` through the operator domain ``op``.
+
+    Outputs pass :func:`~repro.distributed.sharding.constrain_replicated`
+    — a no-op except under a serve-mesh scope, where pinning every op
+    boundary replicated over "model" keeps the sharded graph bit-exact.
+    A per-shard ``(S,)`` BER vector in ``fi`` routes through the sharded
+    kernel-free injection (``inject_bitflips_sharded``): each output-column
+    block flips at its own shard's admitted rate.
+    """
     if fi is None:
-        return x @ w
-    if fi.fused and fi.use_systolic_kernel:
-        return kops.aged_linear(
-            x, w, ber=fi.ber_for(op), seed=fi.seed_for(op, salt),
-            use_kernel=True, fused=True)
+        return constrain_replicated(x @ w)
+    ber = fi.ber_for(op)
+    if fi.fused and fi.use_systolic_kernel and jnp.ndim(ber) == 0:
+        return constrain_replicated(kops.aged_linear(
+            x, w, ber=ber, seed=fi.seed_for(op, salt),
+            use_kernel=True, fused=True))
     # legacy routes keep the full 64-bit key stream (pre-fused behaviour)
-    return kops.aged_linear(
-        x, w, ber=fi.ber_for(op), key=fi.key_for(op, salt),
-        use_kernel=fi.use_systolic_kernel, fused=False)
+    return constrain_replicated(kops.aged_linear(
+        x, w, ber=ber, key=fi.key_for(op, salt),
+        use_kernel=fi.use_systolic_kernel, fused=False))
 
 
 def op_einsum(spec: str, x: jax.Array, w: jax.Array, op: str,
@@ -119,7 +129,7 @@ def op_einsum(spec: str, x: jax.Array, w: jax.Array, op: str,
     matmul, matching how the accelerator executes the fused layout.
     """
     if fi is None:
-        return jnp.einsum(spec, x, w)
+        return constrain_replicated(jnp.einsum(spec, x, w))
     ins, out_spec = spec.split("->")
     x_spec, w_spec = ins.split(",")
     contract = [c for c in x_spec if c in w_spec]
@@ -138,15 +148,33 @@ def op_batched_matmul(a: jax.Array, b: jax.Array, op: str,
                       fi: Optional[FaultConfig] = None, salt=0) -> jax.Array:
     """Activation x activation matmul (QK^T / SV domains): ``a @ b`` over
     leading batch dims, int8-quantised with accumulator upsets when faulted.
+
+    Scalar BER keeps the historical stream (Pallas injection on the kernel
+    path, its bit-exact jnp oracle otherwise — identical outputs either
+    way).  A per-shard ``(S,)`` BER vector maps shards onto the flattened
+    head axis (shard ``s`` owns heads ``[s*H//S, (s+1)*H//S)`` — the heads
+    whose projections it owns in the serve layout) with shard-distinct
+    fmix32 streams.
     """
     if fi is None:
-        return a @ b
+        return constrain_replicated(a @ b)
     aq, ascale = kops.quantize_int8(a, axis=-1)
     bq, bscale = kops.quantize_int8(b, axis=-2)
     acc = jnp.einsum("...ik,...kj->...ij", aq.astype(jnp.int32),
                      bq.astype(jnp.int32))
-    acc = kops.inject_bitflips(acc, fi.ber_for(op), fi.key_for(op, salt))
-    return (acc.astype(jnp.float32) * ascale * bscale).astype(a.dtype)
+    ber = fi.ber_for(op)
+    key = fi.key_for(op, salt)
+    if jnp.ndim(ber) == 1:
+        # (B, *heads, M, N) -> (B, H, M, N): blocks of flattened heads
+        flat = acc.reshape(acc.shape[0], -1, *acc.shape[-2:])
+        flat = kops.inject_bitflips_sharded(flat, ber, key, axis=1)
+        acc = flat.reshape(acc.shape)
+    elif fi.use_systolic_kernel:
+        acc = kops.inject_bitflips(acc, ber, key)
+    else:
+        acc = kops.inject_bitflips_ref(acc, ber, key)
+    return constrain_replicated(
+        (acc.astype(jnp.float32) * ascale * bscale).astype(a.dtype))
 
 
 # --------------------------------------------------------------------------- #

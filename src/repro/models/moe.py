@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import MoEConfig
+from repro.distributed.sharding import constrain_replicated
 from .layers import FaultConfig, mlp_apply, mlp_init, op_linear
 
 
@@ -146,7 +147,11 @@ def moe_apply_global(x: jax.Array, p: Dict, moe: MoEConfig, variant: str,
             * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
     else:
         h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
-    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    # expert-parallel under a serve mesh: E-sharded weights keep h/out_buf
+    # E-sharded (batch-like, exact); pin the combined buffer replicated
+    # before the token gather crosses shards
+    out_buf = constrain_replicated(
+        jnp.einsum("ecf,efd->ecd", h, p["w_down"]))
 
     # gather back and combine with router weights
     out_tok = out_buf[flat_e, safe_pos]                 # (T*K, d)

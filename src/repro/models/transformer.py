@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
+from repro.distributed.sharding import constrain_replicated
 from . import attention as attn_lib
 from .layers import (FaultConfig, apply_rope, init_norm, mlp_apply, mlp_init,
                      norm, op_einsum, op_linear, rms_norm)
@@ -335,7 +336,9 @@ def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None,
         proj = dequant_tree({"p": params["prefix_proj"]}, x.dtype)["p"]
         pe = op_linear(prefix_embeds.astype(x.dtype), proj, "embed")
         x = jnp.concatenate([pe, x], axis=1)
-    return x
+    # serve mesh: the gather from a vocab-sharded table psums exact zeros —
+    # pin the result replicated so downstream ops see full activations
+    return constrain_replicated(x)
 
 
 def unembed(params, cfg: ModelConfig, x):
@@ -343,7 +346,7 @@ def unembed(params, cfg: ModelConfig, x):
     w = dequant_tree({"w": w}, x.dtype)["w"]
     if cfg.tie_embeddings:
         w = w.T
-    return (x @ w).astype(jnp.float32)
+    return constrain_replicated((x @ w).astype(jnp.float32))
 
 
 def forward_logits(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,

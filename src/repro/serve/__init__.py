@@ -8,10 +8,12 @@ from .slots import SlotState, init_slots
 from .online import (OnlineFleetEngine, OnlineServeEngine,
                      OnlineServeResult, Request, RequestQueue,
                      requests_from_workload)
+from .sharded import MeshGenerateResult, MeshServeEngine, default_serve_mesh
 
 __all__ = ["make_decode_fn", "make_decode_step", "make_generate_fn",
            "make_prefill_fn", "make_prefill_step", "sample_token",
            "FleetServeEngine", "ServeEngine", "cache_stats",
            "clear_caches", "SlotState", "init_slots",
            "OnlineFleetEngine", "OnlineServeEngine", "OnlineServeResult",
-           "Request", "RequestQueue", "requests_from_workload"]
+           "Request", "RequestQueue", "requests_from_workload",
+           "MeshGenerateResult", "MeshServeEngine", "default_serve_mesh"]

@@ -349,6 +349,9 @@ class FleetServeEngine:
         ``capacity``, ``key``, ...) through to
         :meth:`repro.core.fleet.FleetRuntime.apply_load`, which this
         forwards to."""
+        assert getattr(fleet, "n_shards", 1) == 1, \
+            "FleetServeEngine vmaps whole devices; a shard-granular fleet " \
+            "(n_shards > 1) is served by repro.serve.sharded.MeshServeEngine"
         self.cfg = cfg
         self.params = params
         self.fleet = fleet
@@ -370,11 +373,14 @@ class FleetServeEngine:
 
         BER columns come straight from the fleet snapshot's (N, O) array —
         no per-device ``DeviceView`` round-trips — and each lane gets an
-        independent fold of the call key.
+        independent fold of the call key.  The source is the fleet's
+        *cached jax-native* view (``op_ber_jax``): between age changes the
+        host->device transfer has already happened, so building the config
+        is pure jnp slicing.
         """
         N = self.fleet.n_devices
-        ber = self.fleet.op_ber_array()                      # (N, O)
-        bers = {op: jnp.asarray(ber[:, i], jnp.float32)
+        ber = self.fleet.op_ber_jax()                        # (N, O) jnp
+        bers = {op: ber[:, i]
                 for i, op in enumerate(self.fleet.operators)}
         keys = jax.random.split(call_key, N)                 # (N, key)
         return FaultConfig(bers=bers, key=keys,

@@ -490,6 +490,9 @@ class OnlineFleetEngine:
         from repro.sched.router import get_router
         assert not cfg.n_encoder_layers and not cfg.prefix_tokens, \
             "online serving covers decoder-only families"
+        assert getattr(fleet, "n_shards", 1) == 1, \
+            "online lanes are whole devices; a shard-granular fleet " \
+            "(n_shards > 1) is served by repro.serve.sharded.MeshServeEngine"
         self.cfg = cfg
         self.params = params
         self.fleet = fleet

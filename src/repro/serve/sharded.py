@@ -1,0 +1,204 @@
+"""Mesh-sharded serving: one big model, ONE sharded dispatch, per-shard aging.
+
+Where :class:`repro.serve.engine.FleetServeEngine` vmaps N whole devices
+over replicated params (fleet of small models), this engine serves ONE
+model that is too big for a single device by sharding prefill + the scanned
+decode + in-graph sampling over a ``jax.sharding`` mesh — tensor/expert
+parallelism over the ``"model"`` axis using the *serve layout* rules in
+:mod:`repro.distributed.sharding` (output-dim-only sharding, replicated
+fallbacks, activations pinned replicated at op boundaries).  That layout is
+**bit-exact** against the single-device scanned path: no float contraction
+ever spans shards, so GSPMD's only collectives are all-gathers
+(``tests/test_serve_sharded.py`` locks this down).
+
+Aging is *heterogeneous inside the dispatch*: with a shard-granular
+:class:`repro.core.fleet.FleetRuntime` (``n_shards == tp``), each mesh
+shard carries its own (age, dVth, BER) aging unit, and the
+:class:`~repro.models.layers.FaultConfig` handed to the graph holds
+``(S,)`` per-operator BER *vectors* — every weight matmul's output-column
+block (the columns shard ``s`` physically owns under the serve layout)
+flips at shard ``s``'s policy-admitted rate, from a shard-distinct fmix32
+stream (:func:`repro.kernels.ops.inject_bitflips_sharded`).  The BER
+vectors, keys and step enter as traced pytree leaves ``device_put``
+replicated over the mesh with one consistent sharding, so advancing shard
+ages between calls re-jits nothing (``steps.TRACE_COUNTS`` guards).
+
+The engine casts floating-point params to ``serve_dtype`` (default
+bfloat16) at construction: bf16 GEMM column slices are bit-exact on the
+reference backend, float32 ones are not — the measured fact the exactness
+contract rests on (see the module docstring of
+``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.core.fleet import FleetRuntime
+from repro.distributed import sharding as shrules
+from repro.models.layers import FaultConfig
+from . import steps
+from .engine import ServeEngine, compile_cache
+
+
+@dataclasses.dataclass
+class MeshGenerateResult:
+    tokens: np.ndarray           # (B, steps) generated ids
+    bers: np.ndarray             # (S, O) per-shard BERs served ((1, O) uniform)
+    operators: tuple             # column order of ``bers``
+    ages_years: np.ndarray       # (S,) per-shard ages
+    power_w: float
+
+
+def default_serve_mesh(tp: Optional[int] = None) -> Mesh:
+    """("data", "model") mesh over the visible devices, model=tp (all)."""
+    n = len(jax.devices())
+    tp = n if tp is None else int(tp)
+    assert n % tp == 0, (n, tp)
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
+
+
+@compile_cache("mesh_generate")
+def _mesh_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
+                      top_k: Optional[int], mesh: Mesh):
+    """The single-dispatch sharded generation function, jitted.
+
+    The serve-mesh scope is entered *inside* the function body, i.e. at
+    trace time: every ``constrain_replicated`` hook in the model lowers to
+    a with_sharding_constraint against this mesh, and the hook stays a
+    no-op for every other trace in the process.
+    """
+    gen = steps.make_generate_fn(cfg, max_len, n_steps, top_k)
+
+    def sharded_gen(params, prompts, fi, key, temp, *extras):
+        with shrules.serve_mesh_scope(mesh):
+            return gen(params, prompts, fi, key, temp, *extras)
+
+    return jax.jit(sharded_gen)
+
+
+class MeshServeEngine:
+    """Serve one mesh-sharded model with per-shard aging in one dispatch."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 mesh: Optional[Mesh] = None, tp: Optional[int] = None,
+                 fleet: Optional[FleetRuntime] = None, device: int = 0,
+                 runtime=None, max_len: int = 512, seed: int = 0,
+                 serve_dtype=jnp.bfloat16):
+        """``fleet`` (shard-granular, ``n_shards == tp``) drives per-shard
+        BERs for fleet device ``device``; alternatively a legacy
+        single-device ``runtime`` serves shard-uniform BERs (the legacy
+        scalar fault streams — bit-exact with ``ServeEngine``'s oracle).
+        Neither: clean sharded serving.  ``params`` may live anywhere;
+        they are cast (floats -> ``serve_dtype``) and laid out over
+        ``mesh`` with the serve-layout rules here, once."""
+        self.cfg = cfg
+        if mesh is None:
+            mesh = default_serve_mesh(tp)
+        self.mesh = mesh
+        self.tp = shrules._tp(mesh)
+        assert fleet is None or runtime is None, \
+            "pass a shard-granular fleet= OR a uniform runtime=, not both"
+        if fleet is not None:
+            assert fleet.n_shards == self.tp, \
+                f"fleet n_shards={fleet.n_shards} != mesh tp={self.tp}"
+            assert 0 <= device < fleet.n_devices
+        self.fleet = fleet
+        self.device = device
+        if isinstance(runtime, FleetRuntime):
+            runtime = runtime.device(device)
+        self.runtime = runtime
+        self.max_len = max_len
+        self._key = jax.random.PRNGKey(seed)
+        self._repl = NamedSharding(mesh, P())
+
+        cast = jax.tree.map(
+            lambda x: jnp.asarray(x).astype(serve_dtype)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+            else jnp.asarray(x), params)
+        self.specs = shrules.param_specs(cast, cfg, mesh, layout="serve")
+        self.params = shrules.shard_tree(cast, self.specs, mesh)
+
+    # ------------------------------------------------------------------ #
+    def _fault_config(self) -> Optional[FaultConfig]:
+        """(S,)-vector BERs from the fleet's shard row, or uniform scalars.
+
+        Both routes force the kernel-free injection paths
+        (``use_systolic_kernel=False``): a ``pallas_call`` is a
+        single-device program and does not partition under GSPMD.
+        """
+        if self.fleet is None and self.runtime is None:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        if self.fleet is not None:
+            ber = self.fleet.op_ber_shard_jax()[self.device]     # (S, O)
+            bers = {op: ber[:, i]
+                    for i, op in enumerate(self.fleet.operators)}
+        else:
+            bers = {op: jnp.float32(b)
+                    for op, b in self.runtime.op_bers().items()}
+        return FaultConfig(bers=bers, key=sub, step=jnp.int32(0),
+                           use_systolic_kernel=False, fused=False)
+
+    def _extras(self, prefix_embeds, frames) -> tuple:
+        cfg = self.cfg
+        if cfg.n_encoder_layers:
+            assert frames is not None, "enc-dec family needs frames="
+            return (jnp.asarray(frames),)
+        if cfg.prefix_tokens:
+            assert prefix_embeds is not None, "prefix family needs " \
+                                              "prefix_embeds="
+            return (jnp.asarray(prefix_embeds),)
+        return ()
+
+    # ------------------------------------------------------------------ #
+    def generate(self, prompts: np.ndarray, n_steps: int, *,
+                 prefix_embeds=None, frames=None, greedy: bool = True,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None) -> MeshGenerateResult:
+        """prompts: (B, S) int32 -> ``n_steps`` tokens from ONE dispatch.
+
+        Every runtime input (prompts, FaultConfig leaves, key,
+        temperature) is ``device_put`` replicated over the mesh with the
+        same NamedSharding on every call, so age advances and shard-BER
+        updates between calls hit the compiled executable — zero retrace.
+        """
+        cfg = self.cfg
+        fi = self._fault_config()
+        self._key, call_key = jax.random.split(self._key)
+        put = lambda t: jax.device_put(t, self._repl)
+        prompts = put(jnp.asarray(prompts, jnp.int32))
+        extras = tuple(put(e) for e in self._extras(prefix_embeds, frames))
+        if fi is not None:
+            fi = jax.device_put(fi, self._repl)
+        temp = put(ServeEngine._temperature(greedy, temperature))
+        call_key = put(call_key)
+
+        gen = _mesh_generate_fn(cfg, self.max_len, int(n_steps), top_k,
+                                self.mesh)
+        tokens = np.asarray(gen(self.params, prompts, fi, call_key, temp,
+                                *extras))
+
+        if self.fleet is not None:
+            ops = self.fleet.operators
+            bers = np.asarray(self.fleet.op_ber_shard_array()[self.device])
+            ages = np.asarray(self.fleet.ages_years).reshape(
+                self.fleet.n_devices, self.fleet.n_shards)[self.device]
+            power = float(self.fleet.fleet_power()[self.device])
+        elif self.runtime is not None:
+            d = self.runtime.op_bers()
+            ops = tuple(d)
+            bers = np.asarray([[d[o] for o in ops]])
+            ages = np.asarray([self.runtime.age_years])
+            power = float(self.runtime.total_power())
+        else:
+            ops, bers = (), np.zeros((1, 0))
+            ages, power = np.zeros(1), 0.0
+        return MeshGenerateResult(tokens=tokens, bers=bers, operators=ops,
+                                  ages_years=ages, power_w=power)

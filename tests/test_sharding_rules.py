@@ -1,6 +1,11 @@
 """Sharding-rule unit tests (spec shapes, divisibility fallbacks) plus
 multi-device integration via a subprocess (8 faked host devices — kept out
-of this process so other tests see the real single CPU device)."""
+of this process so other tests see the real single CPU device).
+
+Property tests sweep the WHOLE zoo x tp x layout grid (hypothesis when
+installed, the deterministic fallback shim otherwise); the explicit tests
+below them pin each documented serve-layout fallback to the config that
+fires it."""
 import json
 import subprocess
 import sys
@@ -10,9 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.distributed.sharding import batch_spec, param_specs
 
 
@@ -115,6 +122,174 @@ def test_batch_spec_divisibility():
     assert batch_spec(1, mesh) is None
     mesh1 = FakeMesh({"data": 16, "model": 16})
     assert batch_spec(32, mesh1) == ("data",)
+
+
+# --------------------------------------------------------------------------- #
+# property tests: the whole zoo x tp x layout grid
+# --------------------------------------------------------------------------- #
+_SDS_CACHE = {}
+
+
+def _abstract_params(arch):
+    """Abstract param tree for one zoo config (cached: eval_shape only)."""
+    if arch not in _SDS_CACHE:
+        cfg = get_config(arch)
+        from repro.models import encdec, transformer as tf
+        init = encdec.init_params if cfg.n_encoder_layers else tf.init_params
+        _SDS_CACHE[arch] = (cfg, jax.eval_shape(
+            lambda k: init(cfg, k, jnp.bfloat16), jax.random.PRNGKey(0)))
+    return _SDS_CACHE[arch]
+
+
+_STACKS = ("groups", "enc_layers", "dec_layers")
+
+
+def _flat_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda s: isinstance(s, P))
+    out = []
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        out.append(([n for n in names if n is not None], leaf))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(arch=st.sampled_from(ARCH_IDS),
+       tp=st.sampled_from([1, 2, 4, 8, 16]),
+       serve=st.booleans())
+def test_every_param_gets_a_valid_spec(arch, tp, serve):
+    """For every zoo config x tp x layout: every leaf has a spec, specs are
+    full-rank (right-aligned: leading stack axes replicated), and a sharded
+    dim is always divisible by the axis size."""
+    cfg, sds = _abstract_params(arch)
+    mesh = FakeMesh({"data": 2, "model": tp})
+    layout = "serve" if serve else "train"
+    specs = param_specs(sds, cfg, mesh, layout=layout)
+
+    leaves = _flat_with_names(sds)
+    spec_leaves = _flat_with_names(specs)
+    assert len(leaves) == len(spec_leaves) and len(leaves) > 0
+    for (names, leaf), (snames, spec) in zip(leaves, spec_leaves):
+        assert names == snames
+        assert isinstance(spec, P)
+        if tp == 1:
+            assert spec == P(), (arch, names)
+            continue
+        if spec == P():            # fully replicated leaves compress to P()
+            continue
+        assert len(spec) == len(leaf.shape), (arch, names, spec)
+        # leading stacked-layer axes are never sharded
+        n_stack = sum(1 for n in names if n in _STACKS)
+        assert all(ax is None for ax in tuple(spec)[:n_stack]), \
+            (arch, names, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0, (arch, names, leaf.shape, spec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(ARCH_IDS), tp=st.sampled_from([2, 4, 8, 16]))
+def test_serve_layout_never_shards_contraction_dims(arch, tp):
+    """The exact-TP contract: serve specs shard OUTPUT dims only — for 2-D
+    weights (in, out) the contraction (first) dim must stay replicated, so
+    no float reduction ever spans shards."""
+    cfg, sds = _abstract_params(arch)
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": tp}),
+                        layout="serve")
+    for names, spec in _flat_with_names(specs):
+        if names[-1] in ("embed",) or spec == P():
+            continue                       # row gather / fully replicated
+        base = tuple(spec)[sum(1 for n in names if n in _STACKS):]
+        if len(base) == 2:
+            assert base[0] is None, (arch, names, spec)
+
+
+# --------------------------------------------------------------------------- #
+# the documented serve-layout fallbacks, each pinned to a firing config
+# --------------------------------------------------------------------------- #
+def _serve_wq(arch, tp=16):
+    cfg, sds = _abstract_params(arch)
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": tp}),
+                        layout="serve")
+    return [(n, s) for n, s in _flat_with_names(specs) if n[-1] == "wq"]
+
+
+@pytest.mark.parametrize("arch,heads", [
+    ("arctic_480b", 56), ("starcoder2_7b", 36), ("whisper_large_v3", 20),
+    ("paligemma_3b", 8), ("recurrentgemma_2b", 10)])
+def test_serve_head_fallback_replicates(arch, heads):
+    """Head counts not divisible by tp=16 REPLICATE wq under the serve
+    layout (the train layout would contraction-shard instead — exactness
+    over memory)."""
+    cfg = get_config(arch)
+    assert cfg.n_heads == heads and heads % 16 != 0
+    wqs = _serve_wq(arch)
+    assert wqs, arch
+    for names, spec in wqs:
+        assert all(ax is None for ax in tuple(spec)), (arch, names, spec)
+
+
+def test_serve_head_rule_fires_when_divisible():
+    for names, spec in _serve_wq("deepseek_7b"):     # H=32 % 16 == 0
+        assert "model" in tuple(spec), (names, spec)
+
+
+def test_serve_gqa_kv_fallback():
+    """GQA with fewer KV heads than tp: wk/wv replicate, wq still shards."""
+    cfg, sds = _abstract_params("llama3_8b")         # H=32, KV=8
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": 16}),
+                        layout="serve")
+    for names, spec in _flat_with_names(specs):
+        if names[-1] in ("wk", "wv"):
+            assert all(ax is None for ax in tuple(spec)), (names, spec)
+        if names[-1] == "wq":
+            assert "model" in tuple(spec), (names, spec)
+
+
+def test_serve_vocab_fallback_whisper():
+    """vocab=51866 is not divisible by 16: the lm_head replicates."""
+    cfg, sds = _abstract_params("whisper_large_v3")
+    assert cfg.vocab % 16 != 0
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": 16}),
+                        layout="serve")
+    assert specs["lm_head"] == P()         # replicated (compressed spec)
+
+
+def test_serve_tied_vocab_shards_embed():
+    """command_r ties embeddings with vocab % tp == 0: the embed row-shards
+    over the vocab (gather adds exact zeros; the tied unembed becomes
+    column-parallel)."""
+    cfg, sds = _abstract_params("command_r_plus_104b")
+    assert cfg.tie_embeddings and cfg.vocab % 16 == 0
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": 16}),
+                        layout="serve")
+    assert specs["embed"] == P("model", None)
+
+
+def test_serve_vs_train_output_dim_contrast():
+    """w_down: train contraction-shards (f, d) -> ("model", None); serve
+    output-shards -> (None, "model").  The disagreement IS the layout."""
+    cfg, sds = _abstract_params("deepseek_7b")
+    mesh = FakeMesh({"data": 1, "model": 16})
+    train = param_specs(sds, cfg, mesh, layout="train")
+    serve = param_specs(sds, cfg, mesh, layout="serve")
+    g_t = train["groups"]["b0_attn"]["ffn"]["w_down"]
+    g_s = serve["groups"]["b0_attn"]["ffn"]["w_down"]
+    assert g_t == P(None, "model", None)
+    assert g_s == P(None, None, "model")
+
+
+def test_serve_moe_expert_parallel():
+    cfg, sds = _abstract_params("qwen3_moe_235b")    # 128 experts % 16
+    specs = param_specs(sds, cfg, FakeMesh({"data": 1, "model": 16}),
+                        layout="serve")
+    g = specs["groups"]["b0_attn"]["ffn"]
+    assert g["w_up"] == P(None, "model", None, None)
+    assert g["w_down"] == P(None, "model", None, None)
 
 
 MULTIDEV_SCRIPT = textwrap.dedent("""

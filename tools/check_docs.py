@@ -48,7 +48,9 @@ REQUIRED_MODULES = (
     "repro.core.scenario", "repro.core.fleet", "repro.core.policy",
     "repro.sched.workload", "repro.sched.router", "repro.sched.lifetime",
     "repro.calibrate.resilience_sweep", "repro.serve.steps",
-    "repro.serve.online", "repro.kernels.ops", "repro.launch.schedule",
+    "repro.serve.online", "repro.serve.sharded", "repro.kernels.ops",
+    "repro.launch.schedule", "repro.distributed.sharding",
+    "repro.distributed.collectives", "repro.distributed.elastic",
 )
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
