@@ -105,6 +105,55 @@ def bench_sharded_dispatch(quick: bool):
                  "single_tok_s": total / t_single, "bit_exact": exact}
 
 
+def _decode_weight_matmul_shapes(cfg, B: int) -> list:
+    """(M, K, N) of every weight matmul one faulted decode token executes
+    (the ``op_linear`` domains — q/k/v/o, the gated MLP, the unembed)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    per_layer = [(B, d, cfg.n_heads * hd),            # q
+                 (B, d, cfg.n_kv_heads * hd),         # k
+                 (B, d, cfg.n_kv_heads * hd),         # v
+                 (B, cfg.n_heads * hd, d),            # o
+                 (B, d, cfg.d_ff), (B, d, cfg.d_ff),  # gate, up
+                 (B, cfg.d_ff, d)]                    # down
+    return per_layer * cfg.n_layers + [(B, d, cfg.vocab)]    # + unembed
+
+
+def _route_bytes_per_token(cfg, B: int, tp: int) -> dict:
+    """Analytic HBM bytes/decode-token of the two vector-BER routes.
+
+    Reuses ``kernel_bench._hbm_bytes`` (the model the fused-vs-three-pass
+    kernel bench validated).  The fused shard_map route runs the kernel on
+    each shard's (M, N/tp) column block and, unlike the single-device fused
+    kernel, returns the int32 accumulator for the shared external dequant
+    epilogue (cross-route bit-exactness — see ``_fused_aged_matmul_sharded``),
+    so it pays one extra int32 round-trip per output word on top of the
+    fully-fused count.  Non-divisible output dims stay on the kernel-free
+    route in both columns (same downgrade the real graph takes).  Shapes are
+    padded to their resolved blocks exactly as the wrappers pad."""
+    from repro.kernels.ops import _ceil_mult
+    from .kernel_bench import _hbm_bytes
+
+    def one(M, K, N, fused):
+        bm, bn = _ceil_mult(M, 256), _ceil_mult(N, 256)
+        bk = _ceil_mult(K, 256)
+        Mp, Np = -(-M // bm) * bm, -(-N // bn) * bn
+        b = _hbm_bytes(Mp, -(-K // bk) * bk, Np, bm, bn, fused=fused)
+        if fused:
+            b += 8 * Mp * Np        # int32 acc write + dequant re-read
+        return b
+
+    three_pass = fused = 0
+    for M, K, N in _decode_weight_matmul_shapes(cfg, B):
+        three_pass += one(M, K, N, False)
+        if N % tp == 0:
+            fused += tp * one(M, K, N // tp, True)
+        else:                        # divisibility fallback: both routes
+            fused += one(M, K, N, False)   # stay three-pass kernel-free
+    return {"bytes_per_token_three_pass": three_pass,
+            "bytes_per_token_fused": fused,
+            "bytes_saved_ratio": three_pass / max(fused, 1)}
+
+
 def bench_per_shard_aging(quick: bool):
     B, S = 2, 8
     n_steps = 3 if quick else 8
@@ -115,35 +164,66 @@ def bench_per_shard_aging(quick: bool):
     fleet = FleetRuntime(n_devices=1, n_shards=tp)
     for s in range(tp):
         fleet.set_age(years=9.0 * (s + 1) / tp, shard=s)
-    eng = MeshServeEngine(cfg, params, fleet=fleet, max_len=max_len, seed=0)
+    engines = {route: MeshServeEngine(cfg, params, fleet=fleet,
+                                      max_len=max_len, seed=0,
+                                      use_fused_kernel=(route == "fused"))
+               for route in ("fused", "kernel_free")}
 
-    t0 = time.perf_counter()
-    r1 = eng.generate(prompts, n_steps)
-    compile_s = time.perf_counter() - t0
-    before = dict(serve_steps.TRACE_COUNTS)
-    fleet.advance(3.15e7, shard=1)               # one shard ages a year
-    r2 = eng.generate(prompts, n_steps)
-    zero_retrace = dict(serve_steps.TRACE_COUNTS) == before
-    t_warm = _timed(lambda: eng.generate(prompts, n_steps), 2)
+    res, r1, r2 = {}, {}, {}
+    rows = []
+    for route, eng in engines.items():
+        t0 = time.perf_counter()
+        r1[route] = eng.generate(prompts, n_steps)
+        compile_s = time.perf_counter() - t0
+        before = dict(serve_steps.TRACE_COUNTS)
+        fleet.advance(3.15e7, shard=1)           # one shard ages a year
+        r2[route] = eng.generate(prompts, n_steps)
+        fleet.advance(-3.15e7, shard=1)          # rewind: same ages for both
+        zero_retrace = dict(serve_steps.TRACE_COUNTS) == before
+        t_warm = _timed(lambda: eng.generate(prompts, n_steps), 2)
+        res[route] = {"compile_s": compile_s,
+                      "warm_tok_s": B * n_steps / t_warm,
+                      "zero_retrace": zero_retrace}
+        rows.append([f"{route} tp={tp}", f"{compile_s:.1f}s",
+                     f"{t_warm * 1e3:.0f}ms", f"{B * n_steps / t_warm:.0f}"])
 
-    shard_bers_differ = bool(len(np.unique(r1.bers[:, 0])) > 1)
-    rows = [[f"per-shard faulted tp={tp}", f"{compile_s:.1f}s",
-             f"{t_warm * 1e3:.0f}ms", f"{B * n_steps / t_warm:.0f}"]]
-    txt = table("Per-shard aging inside ONE sharded dispatch",
-                ["path", "compile", "wall", "tok/s"], rows)
+    parity = bool(np.array_equal(r1["fused"].tokens,
+                                 r1["kernel_free"].tokens)
+                  and np.array_equal(r2["fused"].tokens,
+                                     r2["kernel_free"].tokens))
+    shard_bers_differ = bool(len(np.unique(r1["fused"].bers[:, 0])) > 1)
+    zero_retrace = all(r["zero_retrace"] for r in res.values())
+    bytes_ = _route_bytes_per_token(cfg, B, tp)
+
+    txt = table("Per-shard aging inside ONE sharded dispatch "
+                "(fused shard_map kernel vs kernel-free GSPMD)",
+                ["route", "compile", "wall", "tok/s"], rows)
+    txt += "\n" + check("fused and kernel-free routes sample identical "
+                        "tokens (before AND after aging)", parity)
     txt += "\n" + check("served per-shard BERs differ across mesh shards",
                         shard_bers_differ,
-                        f"BER(q) spread {r1.bers[:, 0].min():.1e} -> "
-                        f"{r1.bers[:, 0].max():.1e}")
-    txt += "\n" + check("shard age advance + BER update re-jits nothing",
-                        zero_retrace)
-    return txt, {"compile_s": compile_s,
-                 "warm_tok_s": B * n_steps / t_warm,
+                        f"BER(q) spread {r1['fused'].bers[:, 0].min():.1e} "
+                        f"-> {r1['fused'].bers[:, 0].max():.1e}")
+    txt += "\n" + check("shard age advance + BER update re-jits nothing "
+                        "(both routes)", zero_retrace)
+    txt += "\n" + check(
+        "fused route saves analytic HBM bytes per decode token",
+        bytes_["bytes_saved_ratio"] > 1.0,
+        f"{bytes_['bytes_per_token_three_pass'] / 2**20:.2f} MiB -> "
+        f"{bytes_['bytes_per_token_fused'] / 2**20:.2f} MiB "
+        f"({bytes_['bytes_saved_ratio']:.2f}x)")
+    return txt, {"compile_s": res["fused"]["compile_s"],
+                 "warm_tok_s": res["fused"]["warm_tok_s"],
+                 "kernel_free_compile_s": res["kernel_free"]["compile_s"],
+                 "kernel_free_warm_tok_s": res["kernel_free"]["warm_tok_s"],
+                 "routes_bit_exact": parity,
+                 **bytes_,
                  "shard_bers_differ": shard_bers_differ,
                  "zero_retrace": zero_retrace,
-                 "ber_q_per_shard": r1.bers[:, 0].tolist(),
+                 "ber_q_per_shard": r1["fused"].bers[:, 0].tolist(),
                  "tokens_changed_after_aging":
-                     bool(not np.array_equal(r1.tokens, r2.tokens))}
+                     bool(not np.array_equal(r1["fused"].tokens,
+                                             r2["fused"].tokens))}
 
 
 def run(quick: bool = False) -> str:

@@ -1,6 +1,11 @@
 """Benchmark driver: one section per paper table/figure + kernels + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig1b,...]
+    PYTHONPATH=src python -m benchmarks.run --summary   # merge BENCH_*.json
+
+``--summary`` folds every per-section ``BENCH_*.json`` record at the repo
+root into one ``BENCH_summary.json`` keyed by section, so perf PRs have a
+single before/after anchor instead of a dozen scattered files.
 """
 from __future__ import annotations
 
@@ -10,6 +15,27 @@ import time
 
 SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched", "kernels",
             "serve", "online", "mesh", "resilience", "fig1b", "roofline")
+
+
+def write_summary() -> str:
+    """Merge all BENCH_*.json records into BENCH_summary.json."""
+    import json
+    from pathlib import Path
+    root = Path(__file__).resolve().parent.parent
+    merged = {}
+    for path in sorted(root.glob("BENCH_*.json")):
+        if path.name == "BENCH_summary.json":
+            continue
+        section = path.stem[len("BENCH_"):]
+        try:
+            merged[section] = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            merged[section] = {"error": f"unreadable: {e}"}
+    out = root / "BENCH_summary.json"
+    out.write_text(json.dumps({"sections": sorted(merged),
+                               "records": merged}, indent=2) + "\n")
+    return f"[recorded] {out.name} ({len(merged)} sections: " \
+           f"{', '.join(sorted(merged))})"
 
 
 def _run_mesh_subprocess() -> str:
@@ -31,7 +57,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma-separated subset of {SECTIONS}")
+    ap.add_argument("--summary", action="store_true",
+                    help="merge all BENCH_*.json into BENCH_summary.json "
+                         "(no benchmarks are run)")
     args = ap.parse_args()
+    if args.summary:
+        print(write_summary())
+        return
     want = args.only.split(",") if args.only else list(SECTIONS)
 
     runners = {}
@@ -87,7 +119,8 @@ def main():
     if failed:
         print(f"\nFAILED sections: {failed}")
         sys.exit(1)
-    print("\nAll benchmark sections completed.")
+    print("\n" + write_summary())
+    print("All benchmark sections completed.")
 
 
 if __name__ == "__main__":

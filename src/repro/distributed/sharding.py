@@ -422,3 +422,24 @@ def constrain_replicated(x):
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(_SERVE_MESH, P()))
     return x
+
+
+def serve_shard_map_info(n_out: int) -> Optional[Tuple[Mesh, str, int]]:
+    """Serve-layout axis metadata for the shard_map fused-kernel route.
+
+    Returns ``(mesh, MODEL_AXIS, tp)`` when the enclosing serve mesh can
+    shard_map an aged matmul over its ``n_out`` output columns — i.e. a
+    serve mesh is in scope, it actually has tensor parallelism, and the
+    output dim splits evenly over the axis (each shard's column block is
+    then exactly the block :func:`repro.kernels.ops.shard_slices` assigns,
+    so the kernel and kernel-free streams line up).  ``None`` means the
+    caller must stay on the kernel-free GSPMD route — same streams, so the
+    downgrade never changes sampled tokens (see ``aged_linear``).
+    """
+    mesh = _SERVE_MESH
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
+        return None
+    tp = _tp(mesh)
+    if tp <= 1 or n_out % tp != 0:
+        return None
+    return mesh, MODEL_AXIS, tp

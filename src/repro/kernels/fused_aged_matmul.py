@@ -85,6 +85,28 @@ def counter_bits(offset: jax.Array, seed: jax.Array,
     return fmix32(offset * _U(0x9E3779B9) ^ stream_constant(seed, tile_id))
 
 
+def tile_counter_bits(M: int, N: int, seed: jax.Array, *, bm: int,
+                      bn: int) -> jax.Array:
+    """Counter draws for a whole (M, N) block in the kernel's tile layout.
+
+    One uint32 per word, computed exactly as the flush step of every
+    (bm, bn) grid tile computes it — ``tile_id = i * grid_n + j`` over the
+    *padded* grid, ``offset = row-in-tile * bn + col-in-tile`` — so a plain
+    jnp consumer (``ref.fused_aged_matmul_ref``, the sharded kernel-free
+    injection in ``ops.py``) reproduces the kernel's upsets bit-exactly
+    without materialising the pad region.  ``M`` / ``N`` are the *live*
+    (unpadded) extents; draws for pad words are simply never computed
+    (the kernel computes and discards them).
+    """
+    grid_n = -(-N // bn)
+    row = jnp.arange(M, dtype=_U)[:, None]
+    col = jnp.arange(N, dtype=_U)[None, :]
+    tile_id = (row // _U(bm)) * _U(grid_n) + col // _U(bn)
+    offset = (row % _U(bm)) * _U(bn) + col % _U(bn)
+    return counter_bits(offset, jnp.asarray(seed, jnp.int32).astype(_U),
+                        tile_id)
+
+
 def upset_words(acc: jax.Array, bits: jax.Array, q: jax.Array) -> jax.Array:
     """Apply the one-bit-per-word upset given raw uint32 draws.
 

@@ -133,32 +133,146 @@ def shard_slices(n: int, n_shards: int) -> list:
     return [s * n // n_shards for s in range(1, n_shards)]
 
 
-def inject_bitflips_sharded(x: jax.Array, bers, key: jax.Array, *,
-                            axis: int = -1) -> jax.Array:
+def upset_counter_block(acc: jax.Array, ber, seed) -> jax.Array:
+    """Upset one 2-D accumulator block with the fused kernel's counter
+    stream over the SAME (bm, bn) tile grid the shard-local kernel wrapper
+    resolves for this block shape — bit-exact vs :func:`fused_aged_matmul`
+    run on the block with the same seed (``tests/test_shard_map_fused.py``).
+    """
+    from .fused_aged_matmul import tile_counter_bits, upset_words
+    M, N = acc.shape
+    bits = tile_counter_bits(M, N, seed, bm=_ceil_mult(M, 256),
+                             bn=_ceil_mult(N, 256))
+    q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
+    return upset_words(acc, bits, q)
+
+
+def inject_bitflips_sharded(x: jax.Array, bers, key: jax.Array | None = None,
+                            *, seed=None, axis: int = -1) -> jax.Array:
     """Per-shard accumulator upsets: block ``s`` of ``axis`` flips at
     ``bers[s]`` with a shard-distinct stream.
 
     ``bers`` is an ``(S,)`` vector — one BER per mesh shard of the serve
     layout (each shard of the weight's output dim is a physically distinct
-    array region with its own ΔVth history).  The base seed is hashed from
-    ``key`` once and each shard's stream is an fmix32 fold
-    (``fold_seed(base, s)`` — the same stream derivation the fused kernel
-    applies per tile), expanded over that block's own (R, 128) word layout
-    by the jnp oracle.  Everything is plain jnp, so the op partitions
-    under GSPMD and a hand-built reference (slice -> fold ->
-    :func:`inject_bitflips_ref` -> concat) reproduces it exactly
-    (``tests/test_serve_sharded.py``).
+    array region with its own ΔVth history).  Each shard's stream is an
+    fmix32 fold of the base seed (``fold_seed(seed, s)``; ``seed`` hashed
+    from ``key`` when only a key is given) expanded by the fused kernel's
+    *counter PRNG* over the block's own resolved tile grid
+    (:func:`upset_counter_block`): the draws are exactly what
+    :func:`fused_aged_matmul` would generate running shard-locally on that
+    column block, so the shard_map-wrapped kernel route and this pure-jnp
+    route are bit-exact BY CONSTRUCTION — this is the kernel route's
+    oracle.  Everything here is plain jnp, so the op partitions under
+    GSPMD, vectorises under ``vmap``, and a hand-built reference (slice ->
+    fold -> counter draws -> xor) reproduces it exactly
+    (``tests/test_serve_sharded.py``).  Rank > 2 inputs (the qkt/sv
+    flattened-head blocks) collapse their leading dims, keeping the last
+    dim as the tile-layout columns.
+
+    Implementation note: the per-shard blocks are NOT materialised with
+    ``jnp.split``/``jnp.concatenate``.  On a serve mesh with a non-trivial
+    data axis, XLA's SPMD partitioner miscompiles that concat-of-slices
+    pattern on replicated operands — every data replica's contribution is
+    summed, returning ``data_parallelism x`` the true accumulator (seen on
+    jax 0.4.37 CPU; ``tests/test_shard_map_fused.py`` pins the parity that
+    caught it).  Instead, each element's shard id, block-local row/column,
+    and resolved tile parameters are precomputed as static constants and
+    the whole array is upset in one elementwise pass — identical draws,
+    nothing for the partitioner to reassemble.
     """
+    from .fused_aged_matmul import counter_bits, upset_words
     bers = jnp.asarray(bers, jnp.float32)
     S = int(bers.shape[0])
-    if S == 1:
-        return inject_bitflips_ref(x, bers[0], key)
-    base = seed_from_key(key)
-    blocks = jnp.split(x, shard_slices(x.shape[axis], S), axis=axis)
-    out = [inject_bitflips_ref(blk, bers[s],
-                               jax.random.PRNGKey(fold_seed(base, s)))
-           for s, blk in enumerate(blocks)]
-    return jnp.concatenate(out, axis=axis)
+    if seed is None:
+        seed = seed_from_key(key)
+    ax = axis % x.ndim
+    n_ax = x.shape[ax]
+    D = x.shape[-1]
+    R = int(np.prod(x.shape[:-1]))
+    bounds = np.asarray([0] + shard_slices(n_ax, S) + [n_ax])
+    widths = np.diff(bounds)
+    q = 1.0 - (1.0 - bers) ** 32                                  # (S,)
+    seeds = fold_seed(seed, np.arange(S, dtype=np.uint32)) \
+        .astype(jnp.uint32)                                       # (S,)
+
+    x2 = x.reshape(R, D)
+    row = jnp.arange(R, dtype=jnp.uint32)[:, None]
+    col = jnp.arange(D, dtype=jnp.uint32)[None, :]
+    U = lambda a: jnp.asarray(np.asarray(a, np.uint32))
+    if ax == x.ndim - 1:
+        # column split: block s is (R, W_s); per-column constants
+        sid = np.searchsorted(bounds[1:-1], np.arange(D), side="right")
+        bn_s = np.asarray([_ceil_mult(max(int(w), 1), 256)
+                           for w in widths])
+        grid_s = np.maximum(-(-widths // bn_s), 1)
+        bm = np.uint32(_ceil_mult(R, 256))
+        lcol = U(np.arange(D) - bounds[sid])
+        bn, grid = U(bn_s[sid])[None, :], U(grid_s[sid])[None, :]
+        tile_id = (row // bm) * grid + lcol[None, :] // bn
+        offset = (row % bm) * bn + lcol[None, :] % bn
+        bits = counter_bits(offset, seeds[sid][None, :], tile_id)
+        return upset_words(x2, bits, q[sid][None, :]).reshape(x.shape)
+    # leading-axis split (flattened-head blocks): block s is
+    # (lead, W_s, mid, D) reshaped to (lead * W_s * mid, D); per-row
+    # constants recover each row's block-local index and block size
+    mid = int(np.prod(x.shape[ax + 1:-1], dtype=np.int64))
+    g = np.arange(R)
+    h = (g // mid) % n_ax
+    a_ = g // (mid * n_ax)
+    b_ = g % mid
+    sid_ax = np.searchsorted(bounds[1:-1], np.arange(n_ax), side="right")
+    s_row = sid_ax[h]
+    r_loc = U((a_ * widths[s_row] + (h - bounds[s_row])) * mid + b_)
+    rows_s = (R // n_ax) * widths
+    bm_row = U(np.asarray([_ceil_mult(max(int(r), 1), 256)
+                           for r in rows_s])[s_row])[:, None]
+    bn = np.uint32(_ceil_mult(D, 256))
+    grid_n = np.uint32(-(-D // int(bn)))
+    tile_id = (r_loc[:, None] // bm_row) * grid_n + col // bn
+    offset = (r_loc[:, None] % bm_row) * bn + col % bn
+    bits = counter_bits(offset, seeds[s_row][:, None], tile_id)
+    return upset_words(x2, bits, q[s_row][:, None]).reshape(x.shape)
+
+
+def _fused_aged_matmul_sharded(xq, wq, bers, seed, mesh,
+                               shard_axis: str, interpret):
+    """shard_map the fused kernel over ``mesh``'s ``shard_axis``.
+
+    Each shard runs :func:`fused_aged_matmul` — int8 matmul + in-flush
+    accumulator upsets, ONE Pallas kernel — locally on the output-column
+    block it owns under the serve layout, at ``bers[s]`` with the
+    shard-distinct stream ``fold_seed(seed, s)`` passed as shard-local
+    scalars.  Inputs/outputs follow the serve layout's invariants:
+    activations replicated, weight columns sharded, output column-sharded
+    (the caller's ``constrain_replicated`` pin turns the gather into pure
+    data movement).  BERs and the seed are traced — shard age/BER updates
+    between calls re-jit nothing.
+
+    Returns the faulted **int32 accumulator**, not the dequantised float:
+    the caller applies the same ``acc.astype(f32) * xs * ws`` epilogue as
+    the kernel-free route.  Fusing the dequant into the kernel would hand
+    XLA a differently-shaped program on the oracle side, and its simplifier
+    is then free to reassociate the two broadcast multiplies differently —
+    last-ulp float drift that breaks cross-route token equality.  Keeping
+    the epilogue textually identical in both routes keeps them bit-exact by
+    construction; the byte win that matters (no materialised randoms, no
+    separate flip-pass round-trip) is unaffected.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(xq, wq_blk, bers, seed):
+        s = jax.lax.axis_index(shard_axis)
+        return fused_aged_matmul(xq, wq_blk, ber=bers[s],
+                                 seed=fold_seed(seed, s),
+                                 interpret=interpret)
+
+    col = P(None, shard_axis)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), col, P(), P()),
+                     out_specs=col, check_rep=False)(
+        xq, wq, jnp.asarray(bers, jnp.float32),
+        jnp.asarray(seed, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -224,7 +338,9 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
                 seed: jax.Array | None = None,
                 interpret: bool | None = None,
                 use_kernel: bool = True,
-                fused: bool = True) -> jax.Array:
+                fused: bool = True,
+                shard_axis: str | None = None,
+                mesh=None) -> jax.Array:
     """``x (.., K) @ w (K, N)`` executed as the paper's systolic array does.
 
     Quantise activations per-row and weights per-column to int8, multiply
@@ -240,21 +356,57 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
     three-pass route (matmul -> ``make_flip_randoms`` -> ``bitflip_words``),
     retained as the oracle / fallback path.
 
-    ``ber`` may be an ``(S,)`` per-shard vector (mesh serving): the matmul
-    then stays on the pure-jnp route (a ``pallas_call`` is a single-device
-    program and does not partition under GSPMD) and the accumulator's
-    output-column blocks are flipped per shard via
-    :func:`inject_bitflips_sharded`.
+    ``ber`` may be an ``(S,)`` per-shard vector (mesh serving): shard ``s``
+    of the output columns then flips at ``bers[s]`` with the shard-distinct
+    counter stream ``fold_seed(seed, s)``.  Two bit-identical realisations:
+
+    * With ``mesh`` / ``shard_axis`` given (the serve engine passes the
+      active serve mesh) and ``N`` divisible by the axis size ``S``, the
+      matmul is wrapped in ``shard_map`` and every shard runs the ONE fused
+      kernel locally on its own output-column block — the fused path's HBM
+      byte economy survives tensor parallelism.  Requires ``use_kernel``
+      and ``fused``.
+    * Otherwise ``use_kernel=fused=True`` is **silently downgraded** to the
+      pure-jnp kernel-free route — a ``pallas_call`` is a single-device
+      program and does not partition under GSPMD, so without a mesh to
+      shard_map over there is no way to run the kernel per shard.  The
+      downgrade draws the SAME counter streams via
+      :func:`inject_bitflips_sharded`, so routing affects performance only,
+      never sampled tokens, and the kernel-free route doubles as the
+      shard_map route's oracle (``tests/test_shard_map_fused.py``).
     """
     sharded = jnp.ndim(ber) == 1
+    inject = key is not None or seed is not None
+    shard_mapped = False
     if sharded:
-        use_kernel = fused = False
+        S = int(ber.shape[0])
+        shard_mapped = (use_kernel and fused and inject and mesh is not None
+                        and shard_axis is not None
+                        and shard_axis in mesh.axis_names
+                        and int(mesh.shape[shard_axis]) == S
+                        and w.shape[1] % S == 0)
+        if not shard_mapped:
+            # documented downgrade: same streams, kernel-free executor
+            use_kernel = fused = False
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     xq, xs = quantize_int8(x2, axis=-1)
     wq, ws = quantize_int8(w, axis=0)
-    inject = key is not None or seed is not None
+    if sharded and inject:
+        if seed is None:
+            seed = seed_from_key(key)
+        if shard_mapped:
+            acc = _fused_aged_matmul_sharded(xq, wq, ber, seed,
+                                             mesh, shard_axis, interpret)
+        else:
+            acc = ref.systolic_matmul_ref(xq, wq)
+            acc = inject_bitflips_sharded(acc, ber, seed=seed)
+        # one dequant epilogue for BOTH routes — identical jnp expression
+        # => identical XLA rewrites => cross-route bit-exactness survives
+        # the simplifier's broadcast-multiply reassociation freedom
+        out = acc.astype(jnp.float32) * xs * ws
+        return out.reshape(*lead, w.shape[1]).astype(x.dtype)
     if use_kernel and fused and inject:
         if seed is None:
             seed = seed_from_key(key)
@@ -268,12 +420,9 @@ def aged_linear(x: jax.Array, w: jax.Array, *, ber=0.0,
     if inject:
         if key is None:
             key = jax.random.PRNGKey(seed)
-        if sharded:
-            acc = inject_bitflips_sharded(acc, ber, key)
-        else:
-            # kernel-free route stays kernel-free: the jnp oracle injection
-            # is bit-exact vs the Pallas kernel and vmap-friendly
-            acc = (inject_bitflips(acc, ber, key, interpret=interpret)
-                   if use_kernel else inject_bitflips_ref(acc, ber, key))
+        # kernel-free route stays kernel-free: the jnp oracle injection
+        # is bit-exact vs the Pallas kernel and vmap-friendly
+        acc = (inject_bitflips(acc, ber, key, interpret=interpret)
+               if use_kernel else inject_bitflips_ref(acc, ber, key))
     out = acc.astype(jnp.float32) * xs * ws
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)

@@ -30,19 +30,12 @@ def fused_aged_matmul_ref(a: jax.Array, b: jax.Array,
     hash(seed, tile_id))``, with ``tile_id = i * grid_n + j`` exactly as the
     flush step computes it.  Same padded-shape contract as the kernel.
     """
-    from .fused_aged_matmul import counter_bits, upset_words
+    from .fused_aged_matmul import tile_counter_bits, upset_words
 
     acc = systolic_matmul_ref(a, b)
     M, N = acc.shape
     assert M % bm == 0 and N % bn == 0, (acc.shape, bm, bn)
-    grid_n = N // bn
-    row = jnp.arange(M, dtype=jnp.uint32)[:, None]
-    col = jnp.arange(N, dtype=jnp.uint32)[None, :]
-    tile_id = (row // jnp.uint32(bm)) * jnp.uint32(grid_n) \
-        + col // jnp.uint32(bn)
-    offset = (row % jnp.uint32(bm)) * jnp.uint32(bn) + col % jnp.uint32(bn)
-    bits = counter_bits(offset, jnp.asarray(seed, jnp.int32)
-                        .astype(jnp.uint32), tile_id)
+    bits = tile_counter_bits(M, N, seed, bm=bm, bn=bn)
     q = 1.0 - (1.0 - jnp.asarray(ber, jnp.float32)) ** 32
     acc = upset_words(acc, bits, q)
     if xs is None:

@@ -112,6 +112,14 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="run weight matmuls through the int8 systolic "
                          "Pallas kernel (interpret mode on CPU: slow)")
+    ap.add_argument("--fused", dest="fused", action="store_true",
+                    default=None,
+                    help="--mesh route: shard_map the fused aged-matmul "
+                         "Pallas kernel per shard (default on TPU; "
+                         "interpret mode on CPU: slow)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="--mesh route: force the kernel-free GSPMD "
+                         "injection (same streams, same tokens)")
     ap.add_argument("--eager", action="store_true",
                     help="per-token oracle loop instead of the scanned "
                          "single-dispatch path (single-device only)")
@@ -244,8 +252,12 @@ def _run_mesh(args, cfg, params, pol):
         extra["frames"] = np.zeros(
             (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
 
+    # --fused / --no-fused; unset defaults to the engine's fused route
     engine = MeshServeEngine(cfg, params, mesh=mesh, fleet=fleet,
-                             max_len=max_len)
+                             max_len=max_len,
+                             use_fused_kernel=(args.fused
+                                               if args.fused is not None
+                                               else True))
     res = engine.generate(prompts, args.gen_len,
                           temperature=args.temperature, top_k=args.top_k,
                           **extra)

@@ -16,7 +16,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain_replicated
+from repro.distributed.sharding import (constrain_replicated,
+                                        serve_shard_map_info)
 from repro.kernels import ops as kops
 
 
@@ -102,14 +103,28 @@ def op_linear(x: jax.Array, w: jax.Array, op: str,
     Outputs pass :func:`~repro.distributed.sharding.constrain_replicated`
     — a no-op except under a serve-mesh scope, where pinning every op
     boundary replicated over "model" keeps the sharded graph bit-exact.
-    A per-shard ``(S,)`` BER vector in ``fi`` routes through the sharded
-    kernel-free injection (``inject_bitflips_sharded``): each output-column
-    block flips at its own shard's admitted rate.
+    A per-shard ``(S,)`` BER vector in ``fi`` flips each output-column
+    block at its own shard's admitted rate with counter streams keyed on
+    ``fold_seed(seed_for(op, salt), shard)``.  When a serve mesh is in
+    scope (``serve_shard_map_info``) and the fused-kernel flags are on, the
+    matmul is shard_mapped so each shard runs the ONE fused Pallas kernel
+    on its local column block; otherwise the bit-identical kernel-free
+    GSPMD route runs (see ``aged_linear`` — routing is performance-only).
     """
     if fi is None:
         return constrain_replicated(x @ w)
     ber = fi.ber_for(op)
-    if fi.fused and fi.use_systolic_kernel and jnp.ndim(ber) == 0:
+    if jnp.ndim(ber) == 1:
+        mesh = axis = None
+        if fi.fused and fi.use_systolic_kernel:
+            info = serve_shard_map_info(w.shape[-1])
+            if info is not None and info[2] == int(ber.shape[0]):
+                mesh, axis = info[0], info[1]
+        return constrain_replicated(kops.aged_linear(
+            x, w, ber=ber, seed=fi.seed_for(op, salt),
+            use_kernel=fi.use_systolic_kernel, fused=fi.fused,
+            shard_axis=axis, mesh=mesh))
+    if fi.fused and fi.use_systolic_kernel:
         return constrain_replicated(kops.aged_linear(
             x, w, ber=ber, seed=fi.seed_for(op, salt),
             use_kernel=True, fused=True))
@@ -163,16 +178,19 @@ def op_batched_matmul(a: jax.Array, b: jax.Array, op: str,
     acc = jnp.einsum("...ik,...kj->...ij", aq.astype(jnp.int32),
                      bq.astype(jnp.int32))
     ber = fi.ber_for(op)
-    key = fi.key_for(op, salt)
     if jnp.ndim(ber) == 1:
-        # (B, *heads, M, N) -> (B, H, M, N): blocks of flattened heads
+        # (B, *heads, M, N) -> (B, H, M, N): blocks of flattened heads,
+        # counter streams (matches op_linear's sharded seed plumbing — no
+        # threefry chain inside the decode scan)
         flat = acc.reshape(acc.shape[0], -1, *acc.shape[-2:])
-        flat = kops.inject_bitflips_sharded(flat, ber, key, axis=1)
+        flat = kops.inject_bitflips_sharded(flat, ber,
+                                            seed=fi.seed_for(op, salt),
+                                            axis=1)
         acc = flat.reshape(acc.shape)
     elif fi.use_systolic_kernel:
-        acc = kops.inject_bitflips(acc, ber, key)
+        acc = kops.inject_bitflips(acc, ber, fi.key_for(op, salt))
     else:
-        acc = kops.inject_bitflips_ref(acc, ber, key)
+        acc = kops.inject_bitflips_ref(acc, ber, fi.key_for(op, salt))
     return constrain_replicated(
         (acc.astype(jnp.float32) * ascale * bscale).astype(a.dtype))
 

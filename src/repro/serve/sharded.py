@@ -80,7 +80,12 @@ def _mesh_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
         with shrules.serve_mesh_scope(mesh):
             return gen(params, prompts, fi, key, temp, *extras)
 
-    return jax.jit(sharded_gen)
+    # prompts and the call key are freshly device_put per call and never
+    # reused — donate their buffers so XLA can alias them into the decode
+    # carry (a no-op on backends without donation, e.g. CPU CI).  params
+    # and fi are NOT donated: params persist across calls and fi's BER
+    # leaves are cached between age updates.
+    return jax.jit(sharded_gen, donate_argnums=(1, 3))
 
 
 class MeshServeEngine:
@@ -90,14 +95,23 @@ class MeshServeEngine:
                  mesh: Optional[Mesh] = None, tp: Optional[int] = None,
                  fleet: Optional[FleetRuntime] = None, device: int = 0,
                  runtime=None, max_len: int = 512, seed: int = 0,
-                 serve_dtype=jnp.bfloat16):
+                 serve_dtype=jnp.bfloat16, use_fused_kernel: bool = True):
         """``fleet`` (shard-granular, ``n_shards == tp``) drives per-shard
         BERs for fleet device ``device``; alternatively a legacy
         single-device ``runtime`` serves shard-uniform BERs (the legacy
         scalar fault streams — bit-exact with ``ServeEngine``'s oracle).
         Neither: clean sharded serving.  ``params`` may live anywhere;
         they are cast (floats -> ``serve_dtype``) and laid out over
-        ``mesh`` with the serve-layout rules here, once."""
+        ``mesh`` with the serve-layout rules here, once.
+
+        ``use_fused_kernel`` (fleet path only) routes every divisible
+        weight matmul through the shard_map-wrapped fused Pallas kernel —
+        per-shard int8 matmul + in-flush upsets + dequant in ONE kernel —
+        instead of the kernel-free three-pass GSPMD route.  Both routes
+        draw identical counter streams, so generated tokens are
+        bit-identical; only bytes/compile-time change.  The legacy
+        ``runtime=`` path always stays kernel-free (scalar streams are the
+        pre-shard_map threefry contract, pinned by parity tests)."""
         self.cfg = cfg
         if mesh is None:
             mesh = default_serve_mesh(tp)
@@ -114,9 +128,15 @@ class MeshServeEngine:
         if isinstance(runtime, FleetRuntime):
             runtime = runtime.device(device)
         self.runtime = runtime
+        self.use_fused_kernel = bool(use_fused_kernel)
         self.max_len = max_len
         self._key = jax.random.PRNGKey(seed)
         self._repl = NamedSharding(mesh, P())
+        # dispatch-overhead caches: the replicated step-0 constant and the
+        # per-op BER leaves (invalidated when the fleet publishes a new
+        # shard-BER table, i.e. on age advance — not per generate call)
+        self._step0 = jax.device_put(jnp.int32(0), self._repl)
+        self._ber_cache: Optional[tuple] = None
 
         cast = jax.tree.map(
             lambda x: jnp.asarray(x).astype(serve_dtype)
@@ -129,22 +149,41 @@ class MeshServeEngine:
     def _fault_config(self) -> Optional[FaultConfig]:
         """(S,)-vector BERs from the fleet's shard row, or uniform scalars.
 
-        Both routes force the kernel-free injection paths
-        (``use_systolic_kernel=False``): a ``pallas_call`` is a
-        single-device program and does not partition under GSPMD.
+        The fleet path honours ``use_fused_kernel``: vector-BER matmuls
+        then take the shard_map fused-kernel route inside the serve-mesh
+        scope (kernel-free GSPMD otherwise — identical streams either
+        way).  The legacy ``runtime`` path forces the kernel-free scalar
+        paths (``use_systolic_kernel=False``): a scalar-BER ``pallas_call``
+        is a single-device program that does not partition under GSPMD,
+        and its threefry streams are the pinned pre-shard_map contract.
+
+        BER leaves are device_put replicated once per fleet BER table (the
+        table object is cached inside ``FleetRuntime`` between age scans),
+        not once per generate call — only the per-call subkey is put fresh.
         """
         if self.fleet is None and self.runtime is None:
             return None
         self._key, sub = jax.random.split(self._key)
+        fused = False
         if self.fleet is not None:
-            ber = self.fleet.op_ber_shard_jax()[self.device]     # (S, O)
-            bers = {op: ber[:, i]
-                    for i, op in enumerate(self.fleet.operators)}
+            fused = self.use_fused_kernel
+            tab = self.fleet.op_ber_shard_jax()
+            if self._ber_cache is None or self._ber_cache[0] is not tab:
+                ber = tab[self.device]                           # (S, O)
+                bers = {op: jax.device_put(ber[:, i], self._repl)
+                        for i, op in enumerate(self.fleet.operators)}
+                self._ber_cache = (tab, bers)
+            bers = self._ber_cache[1]
         else:
-            bers = {op: jnp.float32(b)
-                    for op, b in self.runtime.op_bers().items()}
-        return FaultConfig(bers=bers, key=sub, step=jnp.int32(0),
-                           use_systolic_kernel=False, fused=False)
+            vals = tuple(sorted(self.runtime.op_bers().items()))
+            if self._ber_cache is None or self._ber_cache[0] != vals:
+                bers = {op: jax.device_put(jnp.float32(b), self._repl)
+                        for op, b in vals}
+                self._ber_cache = (vals, bers)
+            bers = self._ber_cache[1]
+        return FaultConfig(bers=bers, key=jax.device_put(sub, self._repl),
+                           step=self._step0,
+                           use_systolic_kernel=fused, fused=fused)
 
     def _extras(self, prefix_embeds, frames) -> tuple:
         cfg = self.cfg
@@ -165,9 +204,11 @@ class MeshServeEngine:
         """prompts: (B, S) int32 -> ``n_steps`` tokens from ONE dispatch.
 
         Every runtime input (prompts, FaultConfig leaves, key,
-        temperature) is ``device_put`` replicated over the mesh with the
-        same NamedSharding on every call, so age advances and shard-BER
-        updates between calls hit the compiled executable — zero retrace.
+        temperature) enters replicated over the mesh with the same
+        NamedSharding on every call, so age advances and shard-BER updates
+        between calls hit the compiled executable — zero retrace.  BER
+        leaves are re-put only when the fleet publishes a new table;
+        prompts and the call key are donated to the executable.
         """
         cfg = self.cfg
         fi = self._fault_config()
@@ -175,8 +216,8 @@ class MeshServeEngine:
         put = lambda t: jax.device_put(t, self._repl)
         prompts = put(jnp.asarray(prompts, jnp.int32))
         extras = tuple(put(e) for e in self._extras(prefix_embeds, frames))
-        if fi is not None:
-            fi = jax.device_put(fi, self._repl)
+        # fi leaves are already replicated by _fault_config (BERs cached
+        # across calls, key/step put there) — no per-call tree device_put
         temp = put(ServeEngine._temperature(greedy, temperature))
         call_key = put(call_key)
 

@@ -28,7 +28,11 @@ int32 *seed* streams the fused kernel expands in-register, so the weight
 matmuls (``op_linear`` domains) lower with no output-sized random arrays.
 The activation x activation qkt/sv domains (``op_batched_matmul``) still
 route through the three-pass injection.  ``fi=None`` lowers the clean
-graph (what the roofline measures).
+graph (what the roofline measures).  Under a serve-mesh scope with
+``(S,)`` per-shard BER vectors and the fused flags on, the weight-matmul
+domains shard_map the fused kernel per column block
+(``repro.kernels.ops.aged_linear`` — same streams as the kernel-free
+GSPMD route, so routing never changes sampled tokens).
 
 ``TRACE_COUNTS`` ticks once per *trace* of each built function (the Python
 body only runs while jax traces) — the regression tests assert repeated

@@ -36,19 +36,28 @@ def test_shard_slices_boundaries():
     assert sum(b.size for b in blocks) == 4
 
 
-def test_inject_sharded_single_shard_is_ref():
+def test_inject_sharded_single_shard_counter_stream():
+    """S == 1 is just the one-shard case of the counter-stream contract:
+    the whole tensor flips under ``fold_seed(seed, 0)`` — the same draws a
+    tp=1 shard_map of the fused kernel would generate."""
     acc = jax.random.randint(jax.random.PRNGKey(0), (16, 32), -2000, 2000,
                              jnp.int32)
     key = jax.random.PRNGKey(7)
     a = kops.inject_bitflips_sharded(acc, jnp.float32([0.01]), key)
-    b = kops.inject_bitflips_ref(acc, jnp.float32(0.01), key)
+    seed = kops.seed_from_key(key)
+    b = kops.upset_counter_block(acc, jnp.float32(0.01),
+                                 kops.fold_seed(seed, 0))
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(acc)).any()
 
 
 def test_inject_sharded_per_shard_seed_streams():
-    """The per-shard streams are pinned: block s flips exactly as the jnp
-    oracle does under PRNGKey(fold_seed(seed_from_key(key), s)) — the
-    contract the mesh engine's hand-computed reference relies on."""
+    """The per-shard streams are pinned: block s flips exactly as the fused
+    kernel's counter PRNG does under ``fold_seed(seed_from_key(key), s)``
+    over the block's own resolved tile grid — the contract that makes the
+    shard_map-fused route and this kernel-free route bit-exact."""
+    from repro.kernels.fused_aged_matmul import (tile_counter_bits,
+                                                 upset_words)
     S = 4
     acc = jax.random.randint(jax.random.PRNGKey(1), (8, 64), -2000, 2000,
                              jnp.int32)
@@ -56,12 +65,16 @@ def test_inject_sharded_per_shard_seed_streams():
     key = jax.random.PRNGKey(3)
     got = np.asarray(kops.inject_bitflips_sharded(acc, bers, key))
     base = kops.seed_from_key(key)
-    expect = np.concatenate(
-        [np.asarray(kops.inject_bitflips_ref(
-            blk, bers[s], jax.random.PRNGKey(kops.fold_seed(base, s))))
-         for s, blk in enumerate(jnp.split(acc, kops.shard_slices(64, S),
-                                           axis=-1))], axis=-1)
-    np.testing.assert_array_equal(got, expect)
+    expect = []
+    for s, blk in enumerate(jnp.split(acc, kops.shard_slices(64, S),
+                                      axis=-1)):
+        M, N = blk.shape
+        bits = tile_counter_bits(M, N, kops.fold_seed(base, s),
+                                 bm=kops._ceil_mult(M, 256),
+                                 bn=kops._ceil_mult(N, 256))
+        q = 1.0 - (1.0 - bers[s]) ** 32
+        expect.append(np.asarray(upset_words(blk, bits, q)))
+    np.testing.assert_array_equal(got, np.concatenate(expect, axis=-1))
     # shard 0 at BER 0 is untouched; faulted shards actually flipped
     np.testing.assert_array_equal(got[:, :16], np.asarray(acc)[:, :16])
     assert (got[:, 16:] != np.asarray(acc)[:, 16:]).any()
