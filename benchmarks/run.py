@@ -13,8 +13,9 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched", "kernels",
-            "serve", "online", "mesh", "resilience", "fig1b", "roofline")
+SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched",
+            "disruption", "kernels", "serve", "online", "mesh",
+            "resilience", "fig1b", "roofline")
 
 
 def write_summary() -> str:
@@ -82,6 +83,9 @@ def main():
     if "sched" in want:
         from . import sched_bench
         runners["sched"] = sched_bench.run
+    if "disruption" in want:
+        from . import disruption_bench
+        runners["disruption"] = disruption_bench.run
     if "kernels" in want:
         from . import kernel_bench
         runners["kernels"] = kernel_bench.run

@@ -117,6 +117,109 @@ class AgingParams:
         }
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RecoveryParams:
+    """Short-term (partially recoverable) trap-component parameters.
+
+    The compact model's six populations accumulate *monotonically* — the
+    capture/emission balance in :func:`stress_rates` only slows accrual.
+    Sarmadi et al. (PAPERS.md, "Long-Term and Short-Term Transistor
+    Aging in DNNs") show that on top of that permanent trajectory sits a
+    large short-term component that *relaxes during idle intervals*:
+    detrapped charge returns on a timescale of hours once stress is
+    removed, and is re-captured when stress resumes.  We model it as a
+    recoverable pool ``rec`` riding on each population's monotone shift
+    ``dv``:
+
+        cap       = rho * dv                      (recoverable fraction)
+        d rec/dt  = (1-act) * k_relax * (cap - rec) - act * k_retrap * rec
+
+    with ``act`` the fraction of the interval under stress.  The
+    *effective* threshold shift a device exhibits is ``dv - rec``
+    (:func:`effective_dv`).  In the always-stressed limit (``act == 1``)
+    the detrapping drive vanishes, ``rec`` stays pinned at zero and the
+    effective shift collapses exactly onto the historical-effect
+    recursion — the property the scheduler tests assert.
+
+    All three leaves have shape ``(6,)`` (population order of
+    :data:`POPULATIONS`); interface-trap populations are permanent
+    (``rho == 0``).
+    """
+
+    rho: jnp.ndarray       # recoverable fraction of the accumulated shift
+    k_relax: jnp.ndarray   # idle detrapping rate [1/s]
+    k_retrap: jnp.ndarray  # re-capture rate under stress [1/s]
+
+    def tree_flatten(self):
+        return ((self.rho, self.k_relax, self.k_retrap), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def default(cls) -> "RecoveryParams":
+        """Population-resolved defaults: fast NBTI traps relax within
+        hours, slow traps over weeks, HCI interface traps never, HCI
+        oxide traps partially.  Re-capture under stress is faster than
+        relaxation (captured carriers refill emptied traps quickly)."""
+        return cls(
+            rho=jnp.asarray([0.45, 0.10, 0.0, 0.25, 0.0, 0.25],
+                            jnp.float32),
+            k_relax=jnp.asarray([2e-4, 2e-6, 0.0, 5e-5, 0.0, 5e-5],
+                                jnp.float32),
+            k_retrap=jnp.asarray([1e-3, 1e-5, 0.0, 2e-4, 0.0, 2e-4],
+                                 jnp.float32),
+        )
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RecoveryParams":
+        return cls(rho=jnp.asarray(d["rho"], jnp.float32),
+                   k_relax=jnp.asarray(d["k_relax"], jnp.float32),
+                   k_retrap=jnp.asarray(d["k_retrap"], jnp.float32))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rho": np.asarray(self.rho).tolist(),
+                "k_relax": np.asarray(self.k_relax).tolist(),
+                "k_retrap": np.asarray(self.k_retrap).tolist()}
+
+
+def relax_step(rparams: RecoveryParams, dv_mv: jnp.ndarray,
+               rec_mv: jnp.ndarray, act, dt) -> jnp.ndarray:
+    """Advance the recoverable pool over a wall-clock segment ``dt`` [s].
+
+    Exact exponential step of the linear relaxation ODE (see
+    :class:`RecoveryParams`): with ``a = k_relax*(1-act)`` and
+    ``b = k_retrap*act`` the pool decays toward the split equilibrium
+    ``rec_inf = a/(a+b) * rho*dv`` with rate ``a+b``.  Clipped into
+    ``[0, rho*dv]`` so the effective shift ``dv - rec`` can never drop
+    below the permanent floor ``(1-rho)*dv`` nor exceed the monotone
+    stress trajectory ``dv``.  At ``act == 1`` the drive ``a`` is exactly
+    zero, so a pool that starts empty stays bit-exactly empty — the
+    always-stressed collapse.  Fully traceable; broadcasts over any
+    leading (device, operator) axes.
+    """
+    act = jnp.clip(jnp.asarray(act, jnp.float32), 0.0, 1.0)
+    a = rparams.k_relax * (1.0 - act)
+    b = rparams.k_retrap * act
+    lam = a + b
+    cap = rparams.rho * dv_mv
+    # a == 0 -> equilibrium 0 without dividing by a zero rate sum
+    rec_inf = a * cap / jnp.maximum(lam, 1e-30)
+    rec = rec_inf + (rec_mv - rec_inf) * jnp.exp(-lam * jnp.asarray(
+        dt, jnp.float32))
+    return jnp.clip(rec, 0.0, cap)
+
+
+def effective_dv(dv_mv: jnp.ndarray, rec_mv) -> jnp.ndarray:
+    """Exhibited threshold shift: monotone state minus the relaxed pool."""
+    if rec_mv is None:
+        return dv_mv
+    return dv_mv - rec_mv
+
+
 def self_heating_temp(V: jnp.ndarray, t_amb: float = T_AMB, dT_sh: float = 8.0,
                       v_ref: float = V_NOM) -> jnp.ndarray:
     """Channel temperature including the transient self-heating rise [9].

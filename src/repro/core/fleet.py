@@ -32,10 +32,11 @@ is what :class:`repro.serve.engine.ServeEngine` consumes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional
 
 import numpy as np
 
+from .aging import N_POP
 from .artifacts import Calibration, load_calibration
 from .avs import simulate
 from .constants import DEFAULT_MAX_LOSS_PCT
@@ -142,6 +143,12 @@ class FleetRuntime:
         self._snap: Optional[FleetState] = None     # cache, keyed on ages
         self._ber_jax = None                 # cached jnp views of snapshot
         self._ber_shard_jax = None
+        # short-term recovery extensions: the relaxed-pool series of the
+        # last traffic co-sim ((N*S, O, T, P); None = monotone run), and
+        # a pending exact trap state (from load_state_dict / resize) the
+        # next apply_load resumes from in preference to the age gather
+        self._rec_nop: Optional[np.ndarray] = None
+        self._pending: Optional[Dict[str, np.ndarray]] = None
 
     @classmethod
     def for_model(cls, cfg, **kw) -> "FleetRuntime":
@@ -193,7 +200,8 @@ class FleetRuntime:
                    horizon_s: Optional[float] = None,
                    utilization: float = 0.5, key: int = 0,
                    capacity: float = 1.0,
-                   heat_per_util: Optional[float] = None):
+                   heat_per_util: Optional[float] = None,
+                   recovery=None, thermal=None):
         """Age the fleet under *routed traffic* instead of static stress.
 
         Runs the :func:`repro.sched.lifetime.cosimulate` scan — routing
@@ -222,6 +230,14 @@ class FleetRuntime:
         within the horizon.  Returns the
         :class:`repro.sched.lifetime.CoSimTrajectory` (also kept on
         ``self.last_cosim``).
+
+        ``recovery`` enables the short-term recoverable trap pool
+        (``True`` for defaults, or a
+        :class:`repro.core.aging.RecoveryParams`); the relaxed-pool
+        series is kept so chained ``apply_load`` calls — and
+        trap-state-preserving :meth:`resize` — resume it.  ``thermal``
+        closes the temperature loop on routed power (``True`` or a
+        :class:`repro.sched.lifetime.ThermalParams`).
         """
         from repro.sched import lifetime as sched_lifetime
         from repro.sched.workload import Workload, get_workload
@@ -242,14 +258,22 @@ class FleetRuntime:
         loads = np.asarray(loads, np.float32)
         dmax = self.policy.thresholds(self._unit_scenario, self.operators)
 
-        dv0 = v0 = None
-        if np.any(self._ages_s > 0):        # resume from the aged state
+        dv0 = v0 = rec0 = None
+        if self._pending is not None:       # exact state from a resize /
+            dv0 = self._pending["dv"]       # load_state_dict, consumed by
+            v0 = self._pending["v"]         # the first co-sim
+            rec0 = self._pending["rec"]
+            self._pending = None
+        elif np.any(self._ages_s > 0):      # resume from the aged state
             traj = self._ensure_trajs()
             idx = self._age_indices()[..., None]              # (N, O, 1)
             v0 = np.take_along_axis(np.asarray(traj.V), idx,
                                     axis=-1)[..., 0]
             dv0 = np.take_along_axis(np.asarray(traj.dv),
                                      idx[..., None], axis=-2)[..., 0, :]
+            if self._rec_nop is not None:
+                rec0 = np.take_along_axis(self._rec_nop, idx[..., None],
+                                          axis=-2)[..., 0, :]
 
         if horizon_s is None:
             horizon_s = float(np.mean(np.asarray(self.scenario.lifetime_s,
@@ -261,8 +285,11 @@ class FleetRuntime:
             loads, router=router, util_trace=util_trace,
             n_devices=self._n_units,
             epoch_s=horizon_s / loads.shape[0], capacity=capacity,
-            dv0=dv0, v0=v0, **kw)
+            dv0=dv0, v0=v0, recovery_dynamics=recovery, thermal=thermal,
+            rec0=rec0, **kw)
         self._traj = cos.as_lifetime_trajectory()
+        self._rec_nop = (np.moveaxis(np.asarray(cos.rec), 0, 2)
+                         if cos.rec is not None else None)
         self._invalidate()
         # service-time clock, positioned at the end of the routed horizon
         self._ages_s[:] = float(np.asarray(cos.t)[-1])
@@ -293,6 +320,7 @@ class FleetRuntime:
         age = float(seconds if seconds is not None
                     else years * SECONDS_PER_YEAR)
         self._ages_s[self._unit_sel(device, shard)] = age
+        self._pending = None      # explicit rewind overrides staged state
         self._invalidate()
 
     def advance(self, seconds, device=None, shard=None):
@@ -302,6 +330,7 @@ class FleetRuntime:
         else:
             self._ages_s[sel] = self._ages_s[sel] + np.asarray(
                 seconds, np.float64)
+        self._pending = None
         self._invalidate()
 
     @property
@@ -340,6 +369,120 @@ class FleetRuntime:
             self._snap = FleetState(v_dd=v, delay=delay, dvth_p_mv=dvp,
                                     dvth_n_mv=dvn, ber=ber, power_w=power)
         return self._snap
+
+    # ------------------------------------------------------------------ #
+    # trap-state round-trip: serialize / restore / resize the fleet
+    # ------------------------------------------------------------------ #
+    def trap_state(self) -> Dict[str, np.ndarray]:
+        """Exact per-(unit, operator) aging state at the current ages.
+
+        Returns ``{"ages_s": (N*S,), "dv": (N*S, O, P) monotone
+        per-population shifts [mV], "rec": same-shaped recoverable pool
+        (zeros unless a recovery-enabled ``apply_load`` ran), "v":
+        (N*S, O) supplies [V]}`` — the initial-state triple a co-sim
+        resume consumes, gathered by the same age lookup ``apply_load``
+        itself uses (so a resize + resume is bit-exact).
+        """
+        if self._pending is not None:
+            return {"ages_s": self._ages_s.copy(),
+                    "dv": self._pending["dv"].copy(),
+                    "rec": self._pending["rec"].copy(),
+                    "v": self._pending["v"].copy()}
+        traj = self._ensure_trajs()
+        idx = self._age_indices()[..., None]                   # (N, O, 1)
+        v = np.take_along_axis(np.asarray(traj.V), idx, axis=-1)[..., 0]
+        dv = np.take_along_axis(np.asarray(traj.dv), idx[..., None],
+                                axis=-2)[..., 0, :]
+        rec = (np.take_along_axis(self._rec_nop, idx[..., None],
+                                  axis=-2)[..., 0, :]
+               if self._rec_nop is not None else
+               np.zeros_like(dv))
+        return {"ages_s": self._ages_s.copy(), "dv": dv, "rec": rec,
+                "v": v}
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-able snapshot of the fleet's aging state (round-trips
+        through :meth:`load_state_dict`, including the recoverable-state
+        leaves)."""
+        st = self.trap_state()
+        return {"version": 1,
+                "operators": list(self.operators),
+                "n_shards": self.n_shards,
+                "ages_s": np.asarray(st["ages_s"], np.float64).tolist(),
+                "dv_mv": np.asarray(st["dv"], np.float64).tolist(),
+                "rec_mv": np.asarray(st["rec"], np.float64).tolist(),
+                "v": np.asarray(st["v"], np.float64).tolist()}
+
+    def load_state_dict(self, d: Mapping[str, Any]) -> None:
+        """Restore a :meth:`state_dict` snapshot.
+
+        Old artifacts written before short-term recovery existed carry no
+        ``rec_mv`` key — they load with a zero-filled recoverable pool
+        (which is exact for any always-stressed or monotone history).
+        The restored state is staged and consumed by the next
+        ``apply_load`` resume.
+        """
+        ops = tuple(d.get("operators", self.operators))
+        assert ops == self.operators, \
+            f"operator mismatch: {ops} vs {self.operators}"
+        assert int(d.get("n_shards", self.n_shards)) == self.n_shards
+        dv = np.asarray(d["dv_mv"], np.float32)
+        v = np.asarray(d["v"], np.float32)
+        rec = (np.asarray(d["rec_mv"], np.float32) if "rec_mv" in d
+               else np.zeros_like(dv))
+        want = (self._n_units, len(self.operators), N_POP)
+        assert dv.shape == want, f"dv shape {dv.shape} != {want}"
+        assert rec.shape == want and v.shape == want[:2]
+        self._ages_s[:] = np.asarray(d["ages_s"], np.float64)
+        self._pending = {"dv": dv, "rec": rec, "v": v}
+        self._invalidate()
+
+    def resize(self, keep, n_fresh: int = 0) -> "FleetRuntime":
+        """Trap-state-preserving fleet resize: retirement and hot-swap.
+
+        ``keep`` lists the surviving device indices (in their new order);
+        ``n_fresh`` appends that many factory-fresh devices.  Survivors
+        carry their exact aging state — monotone shifts, recoverable
+        pool, boosted supplies and service-time clocks — into the new
+        fleet (staged; the next ``apply_load`` resumes from it
+        bit-exactly).  Fresh devices start at age zero with zero trap
+        state; on a heterogeneous (batched-scenario) fleet each fresh
+        device inherits the mission profile of a retired slot — the
+        hot-swap replacement sits in the same rack position, so it sees
+        the same thermal row and budget.
+        """
+        assert self.n_shards == 1, \
+            "resize is device-granular; reshape sharded fleets upstream"
+        keep = np.asarray(keep, int)
+        assert keep.size == np.unique(keep).size and \
+            (keep < self.n_devices).all() and (keep >= 0).all()
+        retired = np.asarray(
+            [i for i in range(self.n_devices) if i not in set(keep.tolist())],
+            int)
+        n_new = int(keep.size + n_fresh)
+        assert n_new >= 1
+        if self._scenario_batched:
+            slots = retired if retired.size else keep
+            fresh_slots = np.resize(slots, n_fresh) if n_fresh else \
+                np.empty(0, int)
+            scn = self.scenario[np.concatenate([keep, fresh_slots])]
+        else:
+            scn = self.scenario
+        new = FleetRuntime(self.cal, n_devices=n_new, scenario=scn,
+                           policy=self.policy, operators=self.operators)
+        st = self.trap_state()
+        O = len(self.operators)
+        dv = np.zeros((n_new, O, N_POP), np.float32)
+        rec = np.zeros_like(dv)
+        v = np.broadcast_to(
+            np.asarray(scn.v_init, np.float32).reshape(-1, 1),
+            (n_new, O)).copy()
+        dv[:keep.size] = st["dv"][keep]
+        rec[:keep.size] = st["rec"][keep]
+        v[:keep.size] = st["v"][keep]
+        new._ages_s[:keep.size] = self._ages_s[keep]
+        new._pending = {"dv": dv, "rec": rec, "v": v}
+        return new
 
     # ------------------------------------------------------------------ #
     def op_index(self, op: str) -> int:

@@ -35,20 +35,28 @@ class RemeshPlan:
     microbatches: int            # grad-accum steps preserving global batch
 
 
-def plan_remesh(old_mesh: Mesh, new_n_devices: int, *, global_batch: int,
-                old_microbatches: int = 1) -> RemeshPlan:
-    """Resize the data axis to fit ``new_n_devices`` (model axis fixed).
+def plan_remesh_shape(axis_names: Tuple[str, ...], axis_sizes,
+                      new_n_devices: int, *, global_batch: int,
+                      old_microbatches: int = 1) -> RemeshPlan:
+    """Mesh-free :func:`plan_remesh`: plan from a named shape alone.
 
-    The model (TP) axis is pinned by weight shapes; data parallelism absorbs
-    the delta.  Keeps ``dp * microbatch_size`` constant.
+    Takes the old layout as ``(axis_names, {name: size})`` instead of a
+    live :class:`jax.sharding.Mesh`, so planners that never materialise
+    the old mesh — the fleet-retirement co-simulation
+    (:mod:`repro.sched.disruption`) runs on one CPU device — can still
+    derive the degraded layout.  Semantics are identical: the model (TP)
+    axis is pinned by weight shapes, data parallelism absorbs the delta,
+    and ``dp * microbatches`` is preserved so the global batch (and the
+    training curves) are unchanged.
     """
-    names = old_mesh.axis_names
-    model = old_mesh.shape.get("model", 1)
+    names = tuple(axis_names)
+    sizes = dict(axis_sizes)
+    model = sizes.get("model", 1)
     if new_n_devices % model != 0:
         raise ValueError(f"{new_n_devices} devices not divisible by "
                          f"model={model}")
     new_dp = new_n_devices // model
-    old_dp = int(np.prod([old_mesh.shape[a] for a in names if a != "model"]))
+    old_dp = int(np.prod([sizes[a] for a in names if a != "model"]))
     if global_batch % new_dp != 0:
         # shrink dp to the largest divisor of global_batch
         while new_dp > 1 and global_batch % new_dp != 0:
@@ -60,20 +68,34 @@ def plan_remesh(old_mesh: Mesh, new_n_devices: int, *, global_batch: int,
     # without a from-scratch retrace.  The pod axis keeps whole pods when
     # the new DP degree still fills them, else collapses to size 1.
     if "pod" in names:
-        per_pod_dp = old_mesh.shape["data"]
+        per_pod_dp = sizes["data"]
         if new_dp % per_pod_dp == 0:
-            sizes = {"pod": new_dp // per_pod_dp, "data": per_pod_dp,
-                     "model": model}
+            new_sizes = {"pod": new_dp // per_pod_dp, "data": per_pod_dp,
+                         "model": model}
         else:
-            sizes = {"pod": 1, "data": new_dp, "model": model}
-        new_shape = tuple(sizes[a] for a in names)
+            new_sizes = {"pod": 1, "data": new_dp, "model": model}
+        new_shape = tuple(new_sizes[a] for a in names)
         new_names = names
     else:
         new_shape = tuple(new_dp if a == "data" else model
                           for a in names if a in ("data", "model"))
         new_names = tuple(a for a in names if a in ("data", "model"))
-    return RemeshPlan(tuple(old_mesh.shape[a] for a in names), new_shape,
+    return RemeshPlan(tuple(sizes[a] for a in names), new_shape,
                       new_names, new_micro)
+
+
+def plan_remesh(old_mesh: Mesh, new_n_devices: int, *, global_batch: int,
+                old_microbatches: int = 1) -> RemeshPlan:
+    """Resize the data axis to fit ``new_n_devices`` (model axis fixed).
+
+    The model (TP) axis is pinned by weight shapes; data parallelism absorbs
+    the delta.  Keeps ``dp * microbatch_size`` constant.
+    """
+    return plan_remesh_shape(
+        old_mesh.axis_names, {a: old_mesh.shape[a]
+                              for a in old_mesh.axis_names},
+        new_n_devices, global_batch=global_batch,
+        old_microbatches=old_microbatches)
 
 
 def make_mesh_from_plan(plan: RemeshPlan, devices=None) -> Mesh:

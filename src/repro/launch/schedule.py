@@ -15,6 +15,15 @@ round-robin fleet's worst-case degradation the ``wear_level`` router
 removes by treating routing as an aging actuator (the paper's 45.8 % /
 30.6 % degradation-reduction story, lifted from one device's voltage
 policy to the fleet's traffic policy).
+
+``--scenario`` switches from the router comparison to a disruption
+scenario (:mod:`repro.sched.disruption`): ``flash_crowd`` (sustained
+overload under the closed thermal loop), ``retirement`` (mid-horizon
+device retirement/hot-swap with trap-state-preserving resize + remesh
+plan) or ``rest_to_recover`` (deliberate idling to harvest short-term
+recovery).  ``--recovery`` / ``--thermal`` enable the short-term
+recoverable trap pool and the routed-power thermal RC node on any
+scenario, including the default router comparison.
 """
 from __future__ import annotations
 
@@ -64,7 +73,28 @@ def main(argv=None):
                     choices=("fault_tolerant", "baseline"))
     ap.add_argument("--seed", type=int, default=0,
                     help="arrival-noise stream")
+    ap.add_argument("--scenario", default="routers",
+                    choices=("routers", "flash_crowd", "retirement",
+                             "rest_to_recover"),
+                    help="router comparison (default) or a disruption "
+                         "scenario from repro.sched.disruption")
+    ap.add_argument("--recovery", action="store_true",
+                    help="model the short-term recoverable trap pool")
+    ap.add_argument("--thermal", action="store_true",
+                    help="close the temperature loop on routed power "
+                         "(thermal RC node instead of t_amb + heat*util)")
+    ap.add_argument("--surge-gain", type=float, default=4.0,
+                    help="flash-crowd load multiplier")
+    ap.add_argument("--retire-epoch", type=int, default=None,
+                    help="retirement epoch (default: mid-horizon)")
+    ap.add_argument("--retire-devices", type=int, default=1,
+                    help="number of (most-worn-slot) devices to retire")
+    ap.add_argument("--hot-swap", type=int, default=0,
+                    help="fresh replacements taking retired rack slots")
     args = ap.parse_args(argv)
+
+    if args.scenario != "routers":
+        return _run_disruption(args)
 
     cal = load_calibration()
     n = args.n_devices
@@ -95,7 +125,9 @@ def main(argv=None):
 
     res = compare_routers(cal, scn, policy, loads, routers=routers,
                           n_devices=n, ages_s=ages,
-                          heat_per_util=args.heat_per_util)
+                          heat_per_util=args.heat_per_util,
+                          recovery_dynamics=args.recovery or None,
+                          thermal=args.thermal or None)
 
     hdr = (f"{'router':>12} | {'max ΔVth':>9} | {'spread':>7} | "
            f"{'P_avg fleet':>11} | {'worst V_f':>9} | {'served':>6}")
@@ -116,6 +148,60 @@ def main(argv=None):
               f"(routing as the fleet-scale aging knob, cf. the paper's "
               f"45.8%/30.6% single-device AVS headline)")
     return res
+
+
+def _run_disruption(args):
+    """Dispatch ``--scenario`` to the repro.sched.disruption drivers."""
+    from repro.sched.disruption import (run_flash_crowd,
+                                       run_rest_to_recover,
+                                       run_retirement)
+    common = dict(n_devices=args.n_devices, epochs=args.epochs,
+                  horizon_years=args.horizon_years,
+                  utilization=args.utilization, seed=args.seed)
+    if args.scenario == "flash_crowd":
+        out = run_flash_crowd(surge_gain=args.surge_gain,
+                              recovery=True, thermal=True,
+                              t_amb_spread=args.t_amb_spread, **common)
+        s = out["stats"]
+        print(f"[disrupt] flash crowd x{args.surge_gain:g} over epochs "
+              f"[{s['surge_start']}, {s['surge_end']}): served "
+              f"{100 * s['surge_served_frac']:.1f}% of surge traffic | "
+              f"node T peak {s['t_peak_k']:.1f}K "
+              f"(fleet-mean rise +{s['t_surge_rise_k']:.1f}K, steady "
+              f"{s['t_steady_k']:.1f}K) | fleet-max ΔVth "
+              f"{s['fleet_max_dvp_mv']:.1f}mV (recovered pool "
+              f"{s.get('recovered_mv_final', 0.0):.1f}mV)")
+        return out
+    if args.scenario == "retirement":
+        retire = tuple(range(args.retire_devices))
+        out = run_retirement(retire=retire, hot_swap=args.hot_swap,
+                             retire_epoch=args.retire_epoch,
+                             workload=args.workload,
+                             recovery=True,
+                             thermal=args.thermal or None,
+                             t_amb_spread=args.t_amb_spread, **common)
+        s = out["stats"]
+        pd = out["plan_degraded"]
+        print(f"[disrupt] retired {s['retired']} at epoch "
+              f"{s['retire_epoch']}: fleet {s['n_before']} -> "
+              f"{s['n_after']} devices | remesh "
+              f"{dict(zip(pd.axis_names, pd.old_shape))} -> "
+              f"{dict(zip(pd.axis_names, pd.new_shape))} "
+              f"(microbatches {pd.microbatches}) | survivors resumed "
+              f"bit-exactly at {s['survivor_pre_max_dvp_mv']:.1f}mV, "
+              f"end of horizon {s['fleet_max_dvp_mv']:.1f}mV")
+        return out
+    out = run_rest_to_recover(workload=args.workload,
+                              t_amb_spread=args.t_amb_spread,
+                              stagger_years=args.stagger_years,
+                              recovery=True,
+                              thermal=args.thermal or None, **common)
+    h = out["headline"]
+    print(f"[disrupt] rest_to_recover vs round_robin: fleet-max ΔVth "
+          f"-{h['rest_vs_round_robin_pct']:.1f}% (relaxed pool "
+          f"{h['recovered_mv_final']:.1f}mV harvested by resting the "
+          f"most-worn devices)")
+    return out
 
 
 if __name__ == "__main__":

@@ -9,21 +9,26 @@ routing -> stress -> ΔVth -> policy voltage -> power in one jitted scan.
 served BERs reflect traffic-dependent age; ``python -m
 repro.launch.schedule`` compares routers end to end.
 """
+from .disruption import (run_flash_crowd, run_rest_to_recover,
+                         run_retirement)
 from .lifetime import (DEFAULT_EPOCHS, HEAT_PER_UTIL_K, CoSimTrajectory,
-                       compare_routers, cosim_stats, cosimulate,
-                       initial_state_at_ages)
+                       ThermalParams, compare_routers, cosim_stats,
+                       cosimulate, initial_state_at_ages)
 from .router import (LeastAgedRouter, LeastLoadedRouter, ROUTER_REGISTRY,
-                     RoundRobinRouter, Router, WearLevelRouter, get_router,
-                     register_router, waterfill)
-from .workload import (WORKLOADS, Workload, bursty, diurnal, get_workload,
-                       poisson)
+                     RestToRecoverRouter, RoundRobinRouter, Router,
+                     WearLevelRouter, get_router, register_router,
+                     waterfill)
+from .workload import (WORKLOADS, Workload, bursty, diurnal, flash_crowd,
+                       get_workload, poisson)
 
 __all__ = [
     "DEFAULT_EPOCHS", "HEAT_PER_UTIL_K",
-    "CoSimTrajectory", "compare_routers", "cosim_stats", "cosimulate",
-    "initial_state_at_ages",
+    "CoSimTrajectory", "ThermalParams", "compare_routers", "cosim_stats",
+    "cosimulate", "initial_state_at_ages",
+    "run_flash_crowd", "run_rest_to_recover", "run_retirement",
     "LeastAgedRouter", "LeastLoadedRouter", "ROUTER_REGISTRY",
-    "RoundRobinRouter", "Router", "WearLevelRouter", "get_router",
-    "register_router", "waterfill",
-    "WORKLOADS", "Workload", "bursty", "diurnal", "get_workload", "poisson",
+    "RestToRecoverRouter", "RoundRobinRouter", "Router", "WearLevelRouter",
+    "get_router", "register_router", "waterfill",
+    "WORKLOADS", "Workload", "bursty", "diurnal", "flash_crowd",
+    "get_workload", "poisson",
 ]

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aging
-from repro.core.aging import AgingParams
+from repro.core.aging import AgingParams, RecoveryParams
+from repro.core.constants import V_NOM
 from repro.core.delay import DelayPolynomial
 from repro.core.scenario import SCENARIO_FIELDS, LifetimeTrajectory, Scenario
 
@@ -52,6 +53,62 @@ HEAT_PER_UTIL_K = 12.0
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
+class ThermalParams:
+    """Per-device thermal RC node closing temperature on *routed power*.
+
+    The open-loop heating model (``t_amb + heat_per_util * util``) scales
+    with utilization only; under a flash crowd the feedback that matters
+    is power: an aged device boosted to ``v_max`` burns more per served
+    request, heats further, ages faster.  This node closes that loop
+    inside the co-sim scan:
+
+        P_dev  = sum_ops( util * dyn(V) + leak(V, dVth) )   [W]
+        T_ss   = t_amb + r_th * P_dev                       [K]
+        T'     = T_ss + (T - T_ss) * exp(-epoch_s / tau_s)
+
+    and the epoch's stress temperature is ``T'`` instead of the fixed
+    leaf.  The power coefficients mirror
+    :class:`repro.core.power.PowerModel` but live here as *pytree leaves*
+    so every thermal knob is a traced argument of the cached scan — a
+    thermal sweep re-jits nothing.  The fixed point is bounded: ``util <=
+    1``, ``V <= v_max`` and leakage falls with ΔVth, so ``T_ss`` is
+    bounded by the fresh-device full-load dissipation.
+    """
+
+    r_th: Any = 2.5          # node thermal resistance [K/W]
+    tau_s: Any = 21600.0     # node RC time constant [s]
+    p_dyn0: Any = 0.70       # dynamic power / operator at v0 [W]
+    p_leak0: Any = 0.15      # leakage / operator at (v0, fresh) [W]
+    v0: Any = V_NOM
+    s_slope: Any = 0.085     # subthreshold slope [V/decade]
+    k_dibl: Any = 1.5        # supply sensitivity of leakage
+
+    _FIELDS = ("r_th", "tau_s", "p_dyn0", "p_leak0", "v0", "s_slope",
+               "k_dibl")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def from_power_model(cls, pm, *, r_th: float = 2.5,
+                         tau_s: float = 21600.0) -> "ThermalParams":
+        """Lift a calibrated :class:`repro.core.power.PowerModel` into
+        the thermal node (same per-operator dissipation model)."""
+        return cls(r_th=r_th, tau_s=tau_s, p_dyn0=pm.p_dyn0,
+                   p_leak0=pm.p_leak0, v0=pm.v0, s_slope=pm.s_slope,
+                   k_dibl=pm.k_dibl)
+
+    def replace(self, **kw) -> "ThermalParams":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
 class CoSimTrajectory:
     """Structured result of :func:`cosimulate`.
 
@@ -59,6 +116,14 @@ class CoSimTrajectory:
     leads (scan layout).  ``as_lifetime_trajectory`` re-lays the series
     into the fleet's ``(N, O, T)`` convention so a
     :class:`repro.core.fleet.FleetRuntime` can serve from it.
+
+    With short-term recovery enabled, ``dv`` remains the *monotone*
+    per-population state while ``dvp``/``dvn`` (and everything downstream
+    of them: delay, supply, wear signal) are the **effective** totals
+    ``sum(dv - rec)`` — the shift the silicon actually exhibits after
+    idle-interval relaxation.  ``rec`` is the relaxed pool itself;
+    ``t_node`` is the closed-loop node temperature when thermal feedback
+    is on.  Both are ``None`` for legacy (monotone, open-loop) runs.
     """
 
     t: jnp.ndarray          # (E,) epoch-end wall-clock [s]
@@ -66,11 +131,16 @@ class CoSimTrajectory:
     util: jnp.ndarray       # (E, N) routed utilization
     V: jnp.ndarray          # (E, N, O) supply voltage [V]
     delay: jnp.ndarray      # (E, N, O) critical-path delay [s]
-    dvp: jnp.ndarray        # (E, N, O) PMOS ΔVth [mV]
-    dvn: jnp.ndarray        # (E, N, O) NMOS ΔVth [mV]
-    dv: jnp.ndarray         # (E, N, O, P) per-population shifts [mV]
+    dvp: jnp.ndarray        # (E, N, O) PMOS ΔVth [mV] (effective)
+    dvn: jnp.ndarray        # (E, N, O) NMOS ΔVth [mV] (effective)
+    dv: jnp.ndarray         # (E, N, O, P) monotone per-population shifts
+    # short-term recovery / thermal feedback extensions (None when the
+    # corresponding dynamics are disabled — the legacy trajectory shape)
+    rec: Any = None         # (E, N, O, P) relaxed (recovered) pool [mV]
+    t_node: Any = None      # (E, N) thermal-node temperature [K]
 
-    _FIELDS = ("t", "load", "util", "V", "delay", "dvp", "dvn", "dv")
+    _FIELDS = ("t", "load", "util", "V", "delay", "dvp", "dvn", "dv",
+               "rec", "t_node")
 
     def tree_flatten(self):
         return tuple(getattr(self, f) for f in self._FIELDS), None
@@ -116,13 +186,15 @@ def _pop_totals(dv):
 @functools.lru_cache(maxsize=None)
 def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
               n_ops: int, max_boosts: int, recovery: bool,
-              avs_enabled: bool, replay: bool = False):
+              avs_enabled: bool, replay: bool = False,
+              short_term: bool = False, thermal: bool = False):
     """Jitted co-sim scan for one (router, static shape) bucket.
 
     Routers are frozen dataclasses (hashable), so each router
     configuration owns one compiled executable; everything else —
     arrival trace, scenario leaves, thresholds, heating coefficient,
-    capacity, initial state — is a traced argument.
+    capacity, initial state, recovery rates, thermal-node coefficients —
+    is a traced argument.
 
     ``replay=True`` builds the *measured-utilization* variant: the scan
     consumes a per-epoch ``(E, N)`` utilization trace instead of calling
@@ -130,11 +202,18 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
     every replay source).  Feeding a routed run's own ``util`` output
     back through the replay path reproduces its trajectory bit-for-bit:
     the stress recursion downstream of ``util`` is the same code.
+
+    ``short_term=True`` threads the recoverable trap pool through the
+    carry (:func:`repro.core.aging.relax_step`); ``thermal=True``
+    replaces the open-loop ``t_amb + heat*util`` heating with the
+    :class:`ThermalParams` RC node driven by routed power.  Both are
+    *structure* flags: the rate constants and thermal coefficients
+    themselves stay traced, so sweeping them re-jits nothing.
     """
 
     def run(params: AgingParams, poly: DelayPolynomial, scn: Scenario,
             dmax, loads, epoch_s, capacity, heat, dv0, v0, util0,
-            *util_xs):
+            rparams, rec0, tparams, tn0, *util_xs):
         TRACE_COUNTS["cosim"] += 1
         duty0 = jnp.broadcast_to(
             jnp.asarray(scn.duty, jnp.float32), (n_devices,))
@@ -155,18 +234,36 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
         epoch_s = jnp.asarray(epoch_s, jnp.float32)
 
         def epoch_step(carry, x):
-            dv, v, util_prev = carry
+            dv, rec, v, util_prev, tn = carry
             if replay:                      # measured duty, no routing
                 load, util = x
             else:
                 load = x
                 # duty-cycle feedback: route on the wear traffic created
-                wear = jnp.max(_pop_totals(dv)[0], axis=-1)      # (N,)
+                # (the *effective* wear when recovery is modelled — a
+                # rested device genuinely looks younger to the router)
+                eff = dv - rec if short_term else dv
+                wear = jnp.max(_pop_totals(eff)[0], axis=-1)     # (N,)
                 util = router.assign(load, wear, util_prev, capacity)
             # the paper's stress inputs, recomputed from routed load
             duty = duty0 * util
             toggle = toggle0 * util
-            t_amb = t_amb0 + heat * util
+            if thermal:
+                # routed power -> RC node: previous epoch's supply and
+                # wear set this epoch's dissipation
+                eff_c = dv - rec if short_term else dv
+                dvp_c, dvn_c = _pop_totals(eff_c)                # (N, O)
+                dvm = 0.5 * (dvp_c + dvn_c) * 1e-3
+                dyn = tparams.p_dyn0 * (v / tparams.v0) ** 2
+                leak = tparams.p_leak0 * (v / tparams.v0) * 10.0 ** (
+                    (tparams.k_dibl * (v - tparams.v0) - dvm)
+                    / tparams.s_slope)
+                p_dev = jnp.sum(util[:, None] * dyn + leak, axis=-1)
+                t_ss = t_amb0 + tparams.r_th * p_dev
+                tn = t_ss + (tn - t_ss) * jnp.exp(-epoch_s / tparams.tau_s)
+                t_amb = tn
+            else:
+                t_amb = t_amb0 + heat * util
             rates = aging.stress_rates(
                 params, duty=duty[:, None], toggle=toggle[:, None],
                 t_clk=t_clk[:, None], transition_time=tt[:, None],
@@ -174,7 +271,12 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
             dv = aging.update_state(params, dv, v[..., None],
                                     rates[:, None, :], epoch_s,
                                     t_amb[:, None, None])        # (N, O, P)
-            dvp, dvn = _pop_totals(dv)                           # (N, O)
+            if short_term:
+                rec = aging.relax_step(rparams, dv, rec,
+                                       util[:, None, None], epoch_s)
+                dvp, dvn = _pop_totals(dv - rec)                 # effective
+            else:
+                dvp, dvn = _pop_totals(dv)                       # (N, O)
             delay = poly(dvp * 1e-3, dvn * 1e-3, v)
 
             if avs_enabled:
@@ -186,13 +288,18 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
 
                 v, delay = jax.lax.fori_loop(0, max_boosts, boost,
                                              (v, delay))
-            return (dv, v, util), {"util": util, "V": v, "delay": delay,
-                                   "dvp": dvp, "dvn": dvn, "dv": dv}
+            out = {"util": util, "V": v, "delay": delay,
+                   "dvp": dvp, "dvn": dvn, "dv": dv}
+            if short_term:
+                out["rec"] = rec
+            if thermal:
+                out["t_node"] = tn
+            return (dv, rec, v, util, tn), out
 
         xs = jnp.asarray(loads, jnp.float32)
         if replay:
             xs = (xs, jnp.asarray(util_xs[0], jnp.float32))
-        _, out = jax.lax.scan(epoch_step, (dv0, v0, util0), xs)
+        _, out = jax.lax.scan(epoch_step, (dv0, rec0, v0, util0, tn0), xs)
         return out
 
     return jax.jit(run)
@@ -208,7 +315,10 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
                heat_per_util: float = HEAT_PER_UTIL_K,
                dv0=None, v0=None, util0=None,
                recovery: bool = True,
-               avs_enabled: bool = True) -> CoSimTrajectory:
+               avs_enabled: bool = True,
+               recovery_dynamics: RecoveryParams | bool | None = None,
+               thermal: "ThermalParams | bool | None" = None,
+               rec0=None, t_node0=None) -> CoSimTrajectory:
     """Run the traffic-driven lifetime co-simulation for one fleet.
 
     ``scenario`` holds per-device *full-utilization* stress knobs (scalar
@@ -230,9 +340,28 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
     Replaying a routed run's own ``cos.util`` output is bit-identical
     to the routed run.
 
+    ``recovery_dynamics`` enables the short-term recoverable trap pool
+    (``True`` for :meth:`repro.core.aging.RecoveryParams.default`, or an
+    explicit instance); ``rec0`` resumes it.  ``thermal`` closes the
+    temperature loop on routed power (``True`` for default
+    :class:`ThermalParams`); ``t_node0`` resumes the node state.  Note
+    ``recovery`` (the capture/emission *rate* scaling, a long-term AC/DC
+    effect) and ``recovery_dynamics`` (the short-term relaxing pool) are
+    independent knobs.
+
     Returns a :class:`CoSimTrajectory`; ONE jitted scan per
-    (router, shape) — re-routing new traffic re-jits nothing.
+    (router, shape, dynamics-structure) — re-routing new traffic or
+    sweeping recovery/thermal *values* re-jits nothing.
     """
+    if recovery_dynamics is True:
+        recovery_dynamics = RecoveryParams.default()
+    elif recovery_dynamics is False:
+        recovery_dynamics = None
+    if thermal is True:
+        thermal = ThermalParams()
+    elif thermal is False:
+        thermal = None
+    short_term = recovery_dynamics is not None
     replay = util_trace is not None
     if replay:
         util_trace = jnp.asarray(util_trace, jnp.float32)
@@ -274,20 +403,30 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
     if util0 is None:
         util0 = jnp.zeros((n_devices,), jnp.float32)
 
+    if rec0 is None:
+        rec0 = jnp.zeros((n_devices, n_ops, aging.N_POP), jnp.float32)
+    if t_node0 is None:
+        t_node0 = jnp.broadcast_to(
+            jnp.asarray(scenario.t_amb, jnp.float32).reshape(-1),
+            (n_devices,))
+
     fn = _cosim_fn(router, E, n_devices, n_ops,
                    scenario.max_boosts_per_step, recovery, avs_enabled,
-                   replay)
+                   replay, short_term, thermal is not None)
     xtra = (util_trace,) if replay else ()
     out = fn(params, poly, scenario, dmax, loads,
              jnp.float32(epoch_s), jnp.float32(capacity),
              jnp.float32(heat_per_util),
              jnp.asarray(dv0, jnp.float32), jnp.asarray(v0, jnp.float32),
-             jnp.asarray(util0, jnp.float32), *xtra)
+             jnp.asarray(util0, jnp.float32),
+             recovery_dynamics, jnp.asarray(rec0, jnp.float32),
+             thermal, jnp.asarray(t_node0, jnp.float32), *xtra)
     t = (np.arange(E, dtype=np.float64) + 1.0) * float(epoch_s)
     return CoSimTrajectory(t=jnp.asarray(t, jnp.float32), load=loads,
                            util=out["util"], V=out["V"],
                            delay=out["delay"], dvp=out["dvp"],
-                           dvn=out["dvn"], dv=out["dv"])
+                           dvn=out["dvn"], dv=out["dv"],
+                           rec=out.get("rec"), t_node=out.get("t_node"))
 
 
 # --------------------------------------------------------------------------- #
@@ -340,7 +479,7 @@ def cosim_stats(power_model, cos: CoSimTrajectory) -> Dict[str, Any]:
         np.float64)
     load = np.asarray(cos.load, np.float64)
     served = np.asarray(cos.util, np.float64).sum(axis=-1)
-    return {
+    out = {
         "fleet_max_dvp_mv": float(wear[-1].max()),
         "fleet_mean_dvp_mv": float(wear[-1].mean()),
         "wear_spread_mv": float(wear[-1].max() - wear[-1].min()),
@@ -349,6 +488,15 @@ def cosim_stats(power_model, cos: CoSimTrajectory) -> Dict[str, Any]:
         "served_frac": float(served.sum() / max(load.sum(), 1e-12)),
         "util_mean": float(np.asarray(cos.util).mean()),
     }
+    if cos.rec is not None:
+        pm = np.asarray(aging.IS_PMOS, np.float64)
+        rec_p = (np.asarray(cos.rec, np.float64) * pm).sum(axis=-1)
+        out["recovered_mv_final"] = float(rec_p[-1].max())
+    if cos.t_node is not None:
+        tn = np.asarray(cos.t_node, np.float64)
+        out["t_node_peak_k"] = float(tn.max())
+        out["t_node_final_k"] = float(tn[-1].max())
+    return out
 
 
 def compare_routers(cal, scenario: Scenario, policy, loads, *,
@@ -358,7 +506,9 @@ def compare_routers(cal, scenario: Scenario, policy, loads, *,
                     epoch_s: Optional[float] = None,
                     heat_per_util: float = HEAT_PER_UTIL_K,
                     ages_s=None, dv0=None, v0=None,
-                    capacity: float = 1.0) -> Dict[str, Dict[str, Any]]:
+                    capacity: float = 1.0,
+                    recovery_dynamics=None,
+                    thermal=None) -> Dict[str, Dict[str, Any]]:
     """Co-simulate the same fleet + traffic under each router.
 
     ``cal`` is a :class:`repro.core.artifacts.Calibration`; the policy's
@@ -366,7 +516,11 @@ def compare_routers(cal, scenario: Scenario, policy, loads, *,
     (possibly per-device) scenario and shared across routers, so the
     comparison isolates the routing decision.  ``ages_s`` pre-ages the
     fleet (staggered deployment) via :func:`initial_state_at_ages`;
-    explicit ``dv0 / v0`` override it.  Returns
+    explicit ``dv0 / v0`` override it (a pre-aged fleet starts with an
+    empty recoverable pool: sustained static stress pins it at zero).
+    ``recovery_dynamics`` / ``thermal`` pass through to
+    :func:`cosimulate` so router comparisons can include the short-term
+    recovery harvest and the closed thermal loop.  Returns
     ``{router_name: cosim_stats + trajectory}``.
     """
     from repro.core.resilience import OPERATORS
@@ -383,6 +537,8 @@ def compare_routers(cal, scenario: Scenario, policy, loads, *,
         cos = cosimulate(cal.aging, cal.delay_poly, scenario, dmax, loads,
                          router=name, n_devices=n_devices, epoch_s=epoch_s,
                          heat_per_util=heat_per_util, dv0=dv0, v0=v0,
-                         capacity=capacity)
+                         capacity=capacity,
+                         recovery_dynamics=recovery_dynamics,
+                         thermal=thermal)
         out[name] = dict(cosim_stats(cal.power, cos), traj=cos)
     return out

@@ -33,7 +33,12 @@ Registered routers (``register_router`` / ``get_router``):
   first (maximal steering, at the cost of slamming young devices);
 * ``wear_level``   — waterfill on the wear signal itself: devices below
   the fleet's wear level absorb proportionally more traffic until the
-  fleet converges to a common ΔVth (minimises fleet-max ΔVth).
+  fleet converges to a common ΔVth (minimises fleet-max ΔVth);
+* ``rest_to_recover`` — wear-level steering plus *deliberate idling*:
+  when the fleet has capacity headroom, the most-worn devices are rested
+  entirely so their short-term recoverable trap component relaxes
+  (:class:`repro.core.aging.RecoveryParams`); under overload nobody
+  rests, so the conservation contract is unchanged.
 """
 from __future__ import annotations
 
@@ -192,3 +197,40 @@ class WearLevelRouter:
         spread = jnp.maximum(jnp.max(wear) - jnp.min(wear), 1e-6)
         levels = (wear - jnp.min(wear)) / spread       # [0, 1]
         return waterfill(levels, load, capacity, gain=self.gain)
+
+
+@register_router
+@dataclasses.dataclass(frozen=True)
+class RestToRecoverRouter:
+    """Idle the most-worn devices to harvest short-term recovery.
+
+    With the recoverable trap pool modelled
+    (:func:`repro.core.aging.relax_step`), an epoch at zero utilization
+    lets a device's fast traps relax — wear that plain steering can only
+    *redistribute*, resting actually *removes*.  Each epoch the
+    ``rest_frac`` most-worn devices are taken out of rotation entirely,
+    but only while the surviving capacity still covers the servable
+    load: the rest set is the longest most-worn-first prefix that keeps
+    ``sum(capacity[active]) >= load`` (remaining capacity is monotone in
+    the prefix length, so the feasibility cut is exact).  Under overload
+    the prefix is empty and the router degenerates to wear-level
+    waterfilling — the conservation contract (serve ``min(load, total
+    capacity)``) holds unconditionally.
+    """
+    name = "rest_to_recover"
+    rest_frac: float = 0.25     # fraction of the fleet eligible to rest
+    gain: float = 4.0           # wear-level steering for the active set
+
+    def assign(self, load, wear, util_prev, capacity=1.0) -> jnp.ndarray:
+        n = wear.shape[0]
+        load, cap = _servable(load, n, capacity)
+        k_max = int(min(n - 1, round(self.rest_frac * n)))
+        order = jnp.argsort(-wear)                 # most worn first
+        rank = jnp.argsort(order)                  # rank 0 == most worn
+        # capacity left if every device of rank <= r rests
+        remaining = cap.sum() - jnp.cumsum(cap[order])
+        can_rest = (rank < k_max) & (remaining[rank] >= load)
+        cap_active = jnp.where(can_rest, 0.0, cap)
+        spread = jnp.maximum(jnp.max(wear) - jnp.min(wear), 1e-6)
+        levels = (wear - jnp.min(wear)) / spread
+        return waterfill(levels, load, cap_active, gain=self.gain)

@@ -15,7 +15,7 @@ keeps exactly one device busy for the whole epoch, ``load == N`` saturates
 an N-device fleet.  The router (not the workload) decides what happens
 above fleet capacity.
 
-Three registered shapes cover the serving-traffic regimes the scheduler
+Four registered shapes cover the serving-traffic regimes the scheduler
 cares about:
 
 * ``poisson``  — stationary mean with Poisson counting noise (steady API
@@ -24,7 +24,11 @@ cares about:
   noise (consumer traffic; the shape the wear-leveling acceptance test
   and ``repro.launch.schedule`` default to);
 * ``bursty``   — Poisson base plus Bernoulli flash crowds that multiply
-  the epoch's load (launch-day spikes).
+  the epoch's load (launch-day spikes);
+* ``flash_crowd`` — a *sustained* overload window (``surge_gain`` x the
+  mean for a contiguous stretch of epochs) — the disruption scenario
+  driving the thermal-feedback co-simulation
+  (:mod:`repro.sched.disruption`).
 
 ``get_workload(name, n_devices=N)`` resolves a registered shape with its
 mean pre-scaled to the fleet size.
@@ -40,7 +44,8 @@ import numpy as np
 
 # Leaf fields, in pytree order.  Everything here may be batched / traced.
 WORKLOAD_FIELDS = ("mean_load", "amplitude", "period", "phase",
-                   "burst_prob", "burst_gain", "quanta")
+                   "burst_prob", "burst_gain", "quanta",
+                   "surge_start", "surge_len", "surge_gain")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -55,6 +60,9 @@ class Workload:
     burst_prob: Any = 0.0      # per-epoch flash-crowd probability
     burst_gain: Any = 3.0      # load multiplier inside a burst epoch
     quanta: Any = 64.0         # requests per device-epoch (Poisson grain)
+    surge_start: Any = 0.0     # flash-crowd window start [epochs]
+    surge_len: Any = 0.0       # flash-crowd window length (0 = no surge)
+    surge_gain: Any = 1.0      # load multiplier inside the window
     # --- static (aux) structure -------------------------------------------
     n_epochs: int = 480        # length of the emitted trace
     kind: str = "poisson"      # registry label (provenance only)
@@ -85,7 +93,13 @@ class Workload:
         period = jnp.asarray(self.period, jnp.float32)[..., None]
         phase = jnp.asarray(self.phase, jnp.float32)[..., None]
         day = 1.0 + amp * jnp.sin(2.0 * jnp.pi * (e + phase) / period)
-        return mean * jnp.maximum(day, 0.0)
+        # sustained flash-crowd window (distinct from per-epoch Bernoulli
+        # bursts): a contiguous overload interval multiplying the mean.
+        start = jnp.asarray(self.surge_start, jnp.float32)[..., None]
+        length = jnp.asarray(self.surge_len, jnp.float32)[..., None]
+        sgain = jnp.asarray(self.surge_gain, jnp.float32)[..., None]
+        surge = jnp.where((e >= start) & (e < start + length), sgain, 1.0)
+        return mean * jnp.maximum(day, 0.0) * surge
 
     def loads(self, key=None) -> jnp.ndarray:
         """Sample the offered-load trace, shape ``batch_shape + (E,)``.
@@ -150,7 +164,26 @@ def bursty(mean_load: float = 3.0, burst_prob: float = 0.05,
                     kind="bursty", **kw)
 
 
-WORKLOADS = {"poisson": poisson, "diurnal": diurnal, "bursty": bursty}
+def flash_crowd(mean_load: float = 4.0, surge_gain: float = 4.0,
+                surge_start=None, surge_len=None, *,
+                n_epochs: int = 480, **kw) -> Workload:
+    """Sustained overload window: ``surge_gain`` x the mean for a
+    contiguous stretch of epochs (default: 8%% of the horizon starting
+    at 40%%) — the disruption the thermal-feedback co-sim is stressed
+    with.  Distinct from ``bursty``'s independent single-epoch spikes.
+    """
+    if surge_start is None:
+        surge_start = 0.4 * n_epochs
+    if surge_len is None:
+        surge_len = max(1.0, 0.08 * n_epochs)
+    return Workload(mean_load=mean_load, amplitude=0.0, burst_prob=0.0,
+                    surge_start=surge_start, surge_len=surge_len,
+                    surge_gain=surge_gain, n_epochs=n_epochs,
+                    kind="flash_crowd", **kw)
+
+
+WORKLOADS = {"poisson": poisson, "diurnal": diurnal, "bursty": bursty,
+             "flash_crowd": flash_crowd}
 
 
 def get_workload(name: str, *, n_devices: int = 1, utilization: float = 0.5,

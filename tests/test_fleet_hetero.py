@@ -97,3 +97,55 @@ def test_op_ber_array_consistent_with_scalar_accessors(fleet):
     order = np.argsort(MIXED_YEARS)
     worst = arr.max(axis=1)
     assert (np.diff(worst[order]) >= -1e-30).all()
+
+
+# --------------------------------------------------------------------------- #
+# state_dict round-trip, including the recoverable-state leaves
+# --------------------------------------------------------------------------- #
+def test_state_dict_roundtrip_with_recoverable_pool(fleet):
+    """A recovery-enabled fleet serialises to JSON and resumes
+    bit-exactly: the restored fleet replays the next traffic segment to
+    the SAME trajectory as the original."""
+    import json
+
+    U = np.linspace(0.2, 1.0, 24 * fleet.n_devices).reshape(
+        24, fleet.n_devices).astype(np.float32)
+    fleet.apply_load(util_trace=U, horizon_s=SECONDS_PER_YEAR,
+                     recovery=True)
+    d = json.loads(json.dumps(fleet.state_dict()))
+    assert d["version"] == 1
+    assert np.asarray(d["rec_mv"]).any()          # the pool is non-trivial
+
+    other = FleetRuntime(n_devices=fleet.n_devices,
+                         policy="fault_tolerant")
+    other.load_state_dict(d)
+    st_a, st_b = fleet.trap_state(), other.trap_state()
+    for k in ("ages_s", "dv", "rec", "v"):
+        np.testing.assert_allclose(st_b[k], st_a[k], rtol=0, atol=1e-6,
+                                   err_msg=k)
+    U2 = np.flip(U, axis=0).copy()
+    cos_a = fleet.apply_load(util_trace=U2, horizon_s=SECONDS_PER_YEAR,
+                             recovery=True)
+    cos_b = other.apply_load(util_trace=U2, horizon_s=SECONDS_PER_YEAR,
+                             recovery=True)
+    np.testing.assert_allclose(np.asarray(cos_b.dvp),
+                               np.asarray(cos_a.dvp), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cos_b.rec),
+                               np.asarray(cos_a.rec), atol=1e-5)
+
+
+def test_old_artifact_without_rec_loads_zero_filled(fleet):
+    """Snapshots written before short-term recovery existed carry no
+    ``rec_mv`` leaf: they must load with an empty recoverable pool."""
+    fleet.apply_load(util_trace=np.ones((12, fleet.n_devices),
+                                        np.float32),
+                     horizon_s=SECONDS_PER_YEAR)
+    d = fleet.state_dict()
+    d.pop("rec_mv")                                # simulate the old format
+    other = FleetRuntime(n_devices=fleet.n_devices,
+                         policy="fault_tolerant")
+    other.load_state_dict(d)
+    st = other.trap_state()
+    np.testing.assert_array_equal(st["rec"], 0.0)
+    np.testing.assert_allclose(st["dv"], fleet.trap_state()["dv"],
+                               atol=1e-6)

@@ -1,0 +1,216 @@
+"""Short-term recoverable trap pool: relaxation physics + co-sim collapse.
+
+The recoverable component (``repro.core.aging.RecoveryParams`` /
+``relax_step``) rides on top of the monotone six-population recursion;
+these tests pin its load-bearing invariants: the pool is bounded by the
+recoverable fraction (the effective shift never drops below the
+permanent floor nor exceeds the stress trajectory), the always-stressed
+limit collapses bit-exactly onto the existing historical-effect
+recursion, the extended trap-state pytree round-trips, and sweeping any
+recovery/thermal parameter leaf re-jits NOTHING.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aging import (N_POP, RecoveryParams, effective_dv,
+                              relax_step)
+from repro.core.artifacts import load_calibration
+from repro.core.policy import FaultTolerantPolicy
+from repro.core.resilience import OPERATORS
+from repro.core.scenario import Scenario
+from repro.sched import ThermalParams, cosimulate
+from repro.sched import lifetime as sched_lifetime
+
+YEAR_S = 365.25 * 24 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def cal():
+    return load_calibration()
+
+
+@pytest.fixture(scope="module")
+def policy(cal):
+    return FaultTolerantPolicy(ber_model=cal.ber)
+
+
+def _scn(cal, horizon_years=2.0):
+    return Scenario.from_lifetime_config(cal.lifetime_cfg).replace(
+        lifetime_s=horizon_years * YEAR_S)
+
+
+def _replay(cal, policy, util_trace, **kw):
+    scn = _scn(cal)
+    dmax = policy.thresholds(scn, OPERATORS)
+    return cosimulate(cal.aging, cal.delay_poly, scn, dmax, None,
+                      util_trace=jnp.asarray(util_trace, jnp.float32),
+                      **kw)
+
+
+# --------------------------------------------------------------------------- #
+# relax_step physics (hypothesis properties)
+# --------------------------------------------------------------------------- #
+_dv = st.floats(min_value=0.0, max_value=250.0)
+_frac = st.floats(min_value=0.0, max_value=1.0)
+_act = st.floats(min_value=0.0, max_value=1.0)
+_dt = st.floats(min_value=1.0, max_value=3.0e7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dv=_dv, frac=_frac, act=_act, dt=_dt)
+def test_pool_bounded_by_recoverable_fraction(dv, frac, act, dt):
+    """0 <= rec <= rho*dv, so (1-rho)*dv <= dv_eff <= dv — always."""
+    rp = RecoveryParams.default()
+    dv_mv = jnp.full((N_POP,), dv, jnp.float32)
+    rec0 = frac * rp.rho * dv_mv                      # any admissible pool
+    rec = np.asarray(relax_step(rp, dv_mv, rec0, act, dt))
+    cap = np.asarray(rp.rho) * dv
+    assert (rec >= -1e-6).all()
+    assert (rec <= cap + 1e-4).all()
+    eff = np.asarray(effective_dv(dv_mv, rec))
+    assert (eff <= dv + 1e-4).all()                   # never above stress
+    assert (eff >= (1.0 - np.asarray(rp.rho)) * dv - 1e-4).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(dv=_dv, dt=_dt)
+def test_always_stressed_pool_stays_exactly_empty(dv, dt):
+    """act == 1 kills the detrapping drive: an empty pool stays empty
+    bit-exactly, whatever the rates — the collapse onto the monotone
+    recursion is not approximate."""
+    rp = RecoveryParams.default()
+    dv_mv = jnp.full((N_POP,), dv, jnp.float32)
+    rec = relax_step(rp, dv_mv, jnp.zeros((N_POP,), jnp.float32), 1.0, dt)
+    np.testing.assert_array_equal(np.asarray(rec), 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dv=st.floats(min_value=1.0, max_value=250.0), frac=_frac)
+def test_idle_relaxation_is_monotone_toward_cap(dv, frac):
+    """act == 0: the pool approaches rho*dv monotonically in time."""
+    rp = RecoveryParams.default()
+    dv_mv = jnp.full((N_POP,), dv, jnp.float32)
+    rec = frac * rp.rho * dv_mv
+    prev = np.asarray(rec)
+    for dt in (3.6e3, 3.6e4, 3.6e5, 3.6e6):
+        rec = relax_step(rp, dv_mv, rec, 0.0, dt)
+        cur = np.asarray(rec)
+        assert (cur >= prev - 1e-5).all()
+        prev = cur
+    # fast NBTI population (index 0) essentially saturates within weeks
+    assert prev[0] == pytest.approx(float(rp.rho[0]) * dv, rel=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_random_stress_history_keeps_invariants(seed):
+    """Iterate relax_step over a random (act, dt) history riding a
+    growing monotone trajectory: bounds hold at every step."""
+    rnd = np.random.default_rng(seed)
+    rp = RecoveryParams.default()
+    rho = np.asarray(rp.rho)
+    dv = np.zeros((N_POP,), np.float32)
+    rec = jnp.zeros((N_POP,), jnp.float32)
+    for _ in range(12):
+        dv = dv + rnd.uniform(0.0, 8.0, N_POP).astype(np.float32)
+        rec = relax_step(rp, jnp.asarray(dv), rec,
+                         float(rnd.uniform()), float(rnd.uniform(60, 1e6)))
+        r = np.asarray(rec)
+        assert (r >= -1e-6).all() and (r <= rho * dv + 1e-4).all()
+        assert np.isfinite(r).all()
+
+
+# --------------------------------------------------------------------------- #
+# co-sim collapse + effective-wear ordering
+# --------------------------------------------------------------------------- #
+def test_always_stressed_cosim_matches_monotone_recursion(cal, policy):
+    """Replaying a fully-stressed fleet with the recovery pool enabled
+    must reproduce the legacy recursion within 1e-5 mV (acceptance
+    criterion; in practice the collapse is exact)."""
+    U = np.ones((48, 4), np.float32)
+    off = _replay(cal, policy, U)
+    on = _replay(cal, policy, U, recovery_dynamics=True)
+    assert float(np.abs(np.asarray(on.dvp)
+                        - np.asarray(off.dvp)).max()) <= 1e-5
+    assert float(np.abs(np.asarray(on.V) - np.asarray(off.V)).max()) <= 1e-5
+    np.testing.assert_array_equal(np.asarray(on.rec), 0.0)
+    assert off.rec is None                       # legacy trajectory shape
+
+
+def test_idle_windows_relax_effective_wear_only(cal, policy):
+    """A duty-cycled trace relaxes the *effective* shift strictly below
+    the monotone trajectory but never below the permanent floor; the
+    monotone state itself is untouched by the pool."""
+    E, N = 64, 4
+    U = np.zeros((E, N), np.float32)
+    U[0::3] = 1.0                                # stress 1 epoch in 3
+    off = _replay(cal, policy, U)
+    on = _replay(cal, policy, U, recovery_dynamics=True)
+    dv_on, dv_off = np.asarray(on.dv), np.asarray(off.dv)
+    np.testing.assert_allclose(dv_on, dv_off, atol=1e-5)
+    dvp_on, dvp_off = np.asarray(on.dvp), np.asarray(off.dvp)
+    assert (dvp_on <= dvp_off + 1e-5).all()
+    # epoch -2 is idle (the 1-in-3 stress pattern recaptures the pool on
+    # stressed epochs): the relaxed gap must be visible there
+    assert dvp_on[-2].max() < 0.9 * dvp_off[-2].max()
+    rho_max = float(np.max(np.asarray(RecoveryParams.default().rho)))
+    assert (dvp_on >= (1.0 - rho_max) * dvp_off - 1e-4).all()
+    # the relaxed pool accounts exactly for the dvp gap
+    from repro.core.aging import IS_PMOS
+    rec_tot = (np.asarray(on.rec) * IS_PMOS).sum(-1)
+    np.testing.assert_allclose(dvp_off - dvp_on, rec_tot, atol=2e-3)
+
+
+def test_recovery_params_pytree_roundtrip():
+    rp = RecoveryParams.default()
+    back = RecoveryParams.from_dict(json.loads(json.dumps(rp.to_dict())))
+    for f in ("rho", "k_relax", "k_retrap"):
+        np.testing.assert_allclose(np.asarray(getattr(back, f)),
+                                   np.asarray(getattr(rp, f)), rtol=1e-7)
+    # traced-leaf pytree: flatten/unflatten preserves values
+    leaves, aux = rp.tree_flatten()
+    again = RecoveryParams.tree_unflatten(aux, leaves)
+    np.testing.assert_array_equal(np.asarray(again.rho),
+                                  np.asarray(rp.rho))
+
+
+def test_extended_trajectory_pytree_roundtrip(cal, policy):
+    cos = _replay(cal, policy, np.ones((12, 2), np.float32),
+                  recovery_dynamics=True, thermal=True)
+    leaves, aux = cos.tree_flatten()
+    again = type(cos).tree_unflatten(aux, leaves)
+    for f in cos._FIELDS:
+        a, b = getattr(cos, f), getattr(again, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), f)
+    assert cos.rec.shape == (12, 2, len(OPERATORS), N_POP)
+    assert cos.t_node.shape == (12, 2)
+
+
+# --------------------------------------------------------------------------- #
+# structural guard: zero retrace across recovery/thermal leaves
+# --------------------------------------------------------------------------- #
+def test_zero_retrace_across_recovery_and_thermal_leaves(cal, policy):
+    scn = _scn(cal)
+    dmax = policy.thresholds(scn, OPERATORS)
+    U = np.ones((24, 4), np.float32) * 0.6
+    kw = dict(util_trace=jnp.asarray(U))
+    rp = RecoveryParams.default()
+    cosimulate(cal.aging, cal.delay_poly, scn, dmax, None,
+               recovery_dynamics=rp, thermal=True, **kw)
+    before = dict(sched_lifetime.TRACE_COUNTS)
+    # sweep EVERY recovery-rate leaf and the thermal RC leaves: all traced
+    swept = RecoveryParams(rho=rp.rho * 0.5, k_relax=rp.k_relax * 2.0,
+                           k_retrap=rp.k_retrap * 3.0)
+    cosimulate(cal.aging, cal.delay_poly, scn, dmax, None,
+               recovery_dynamics=swept,
+               thermal=ThermalParams.from_power_model(
+                   cal.power, r_th=5.0, tau_s=7200.0), **kw)
+    assert dict(sched_lifetime.TRACE_COUNTS) == before, \
+        "sweeping recovery/thermal parameters must re-jit NOTHING"

@@ -47,6 +47,7 @@ MENTION_EXEMPT = {"SNIPPETS.md", "PAPERS.md", "ISSUE.md"}
 REQUIRED_MODULES = (
     "repro.core.scenario", "repro.core.fleet", "repro.core.policy",
     "repro.sched.workload", "repro.sched.router", "repro.sched.lifetime",
+    "repro.sched.disruption",
     "repro.calibrate.resilience_sweep", "repro.serve.steps",
     "repro.serve.online", "repro.serve.sharded", "repro.kernels.ops",
     "repro.launch.schedule", "repro.distributed.sharding",
