@@ -1,0 +1,176 @@
+"""Benchmark: observability-layer overhead + structural guarantees.
+
+Measures what the telemetry taps cost and locks down what they promise:
+
+* **taps overhead** — median warm-path latency of the scanned serve
+  dispatch and of the online chunk loop with taps enabled vs disabled.
+  The traced graphs are identical either way (the toggle only controls
+  host-side transfer + registry recording), so the guarded ratio is the
+  host cost of reading the aux leaves — must stay ≤ 1.10×;
+* **structural** — taps on/off bit-exactness of tokens and ZERO retrace
+  across the toggle (the unified :func:`repro.obs.metrics.trace_counts`
+  guard), plus the registry export round-trip
+  (:mod:`repro.obs.export`) on the samples the run just produced.
+
+Records ``BENCH_obs.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs.taps import enable_taps
+from repro.serve.engine import ServeEngine
+from repro.serve.online import OnlineServeEngine, Request
+from repro.train.steps import init_train_state
+
+from .common import check, table
+
+ARCH = "deepseek_7b"
+OVERHEAD_LIMIT = 1.10
+
+
+def _setup():
+    cfg = get_config(ARCH).reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    return cfg, params
+
+
+def _sizes(quick: bool):
+    if quick:
+        return {"batch": 2, "prompt_len": 8, "gen_len": 8, "reps": 5,
+                "n_slots": 2, "chunk_steps": 4, "max_new": 6, "n_reqs": 4}
+    return {"batch": 4, "prompt_len": 16, "gen_len": 24, "reps": 15,
+            "n_slots": 3, "chunk_steps": 8, "max_new": 12, "n_reqs": 8}
+
+
+def _median_latency(fn, reps: int) -> float:
+    fn()                                        # warm (compile) once
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_overhead(quick: bool):
+    """Warm-path latency, taps off vs on: serve dispatch + online loop."""
+    cfg, params = _setup()
+    sz = _sizes(quick)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (sz["batch"], sz["prompt_len"])).astype(np.int32)
+    max_len = sz["prompt_len"] + sz["gen_len"] + 1
+
+    eng = ServeEngine(cfg, params, max_len=max_len, seed=7)
+    gen = lambda: eng.generate(prompts, sz["gen_len"], temperature=0.7)
+    t_off = _median_latency(gen, sz["reps"])
+    with enable_taps():
+        t_on = _median_latency(gen, sz["reps"])
+    serve_ratio = t_on / t_off
+
+    def online():
+        e = OnlineServeEngine(cfg, params, n_slots=sz["n_slots"],
+                              max_len=max_len, max_new_cap=sz["max_new"],
+                              chunk_steps=sz["chunk_steps"], seed=7)
+        e.serve([Request(id=i, prompt=prompts[i % sz["batch"]],
+                         max_new=sz["max_new"], arrival=i)
+                 for i in range(sz["n_reqs"])], greedy=True)
+    o_off = _median_latency(online, max(sz["reps"] // 3, 3))
+    with enable_taps():
+        o_on = _median_latency(online, max(sz["reps"] // 3, 3))
+    online_ratio = o_on / o_off
+
+    rows = [["serve scanned generate", f"{t_off * 1e3:.1f}",
+             f"{t_on * 1e3:.1f}", f"{serve_ratio:.3f}"],
+            ["online chunk loop", f"{o_off * 1e3:.1f}",
+             f"{o_on * 1e3:.1f}", f"{online_ratio:.3f}"]]
+    txt = table("Telemetry taps overhead (warm median)",
+                ["path", "off [ms]", "on [ms]", "ratio"], rows)
+    txt += "\n" + check(
+        f"taps overhead <= {OVERHEAD_LIMIT:.2f}x on both paths",
+        serve_ratio <= OVERHEAD_LIMIT and online_ratio <= OVERHEAD_LIMIT,
+        f"serve {serve_ratio:.3f}x, online {online_ratio:.3f}x")
+    return txt, {"serve_off_s": t_off, "serve_on_s": t_on,
+                 "serve_ratio": serve_ratio, "online_off_s": o_off,
+                 "online_on_s": o_on, "online_ratio": online_ratio,
+                 "limit": OVERHEAD_LIMIT}
+
+
+def structural_checks(quick: bool):
+    cfg, params = _setup()
+    sz = _sizes(quick)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab,
+                           (sz["batch"], sz["prompt_len"])).astype(np.int32)
+    max_len = sz["prompt_len"] + sz["gen_len"] + 1
+
+    # bit-exact: same engine seed, taps off vs on
+    off = ServeEngine(cfg, params, max_len=max_len, seed=5).generate(
+        prompts, sz["gen_len"], temperature=0.7)
+    with enable_taps():
+        on = ServeEngine(cfg, params, max_len=max_len, seed=5).generate(
+            prompts, sz["gen_len"], temperature=0.7)
+    bit_exact = bool(np.array_equal(off.tokens, on.tokens))
+    has_taps = on.telemetry is not None and off.telemetry is None
+
+    # zero retrace across the toggle, on the unified guard
+    eng = ServeEngine(cfg, params, max_len=max_len, seed=5)
+    eng.generate(prompts, sz["gen_len"])
+    before = obs_metrics.trace_counts()
+    with enable_taps():
+        eng.generate(prompts, sz["gen_len"])
+    eng.generate(prompts, sz["gen_len"])
+    zero_retrace = obs_metrics.trace_counts() == before
+
+    # export round-trip on the samples this very run produced
+    samples = obs_metrics.REGISTRY.collect()
+    back = obs_export.parse_prometheus(obs_export.prometheus_text(samples))
+    round_trip = [(s.name, tuple(sorted(s.labels)), s.value)
+                  for s in samples] \
+        == [(s.name, s.labels, s.value) for s in back]
+
+    txt = check("tokens bit-exact with taps enabled (aux outputs of the "
+                "same executable)", bit_exact and has_taps)
+    txt += "\n" + check("toggling taps re-traces nothing "
+                        "(unified trace_counts guard)", zero_retrace)
+    txt += "\n" + check(
+        f"Prometheus export round-trips {len(samples)} live samples",
+        round_trip and len(samples) > 0)
+    return txt, {"bit_exact": bit_exact, "zero_retrace": zero_retrace,
+                 "export_round_trip": round_trip,
+                 "n_samples": len(samples)}
+
+
+def run(quick: bool = False) -> str:
+    txt1, overhead = bench_overhead(quick)
+    txt2, struct = structural_checks(quick)
+    out = "\n".join([txt1, txt2])
+
+    record = {"arch": ARCH, "mode": "quick" if quick else "full",
+              "backend": jax.default_backend(),
+              "overhead": overhead, "structural": struct}
+    path = Path(__file__).resolve().parent.parent / "BENCH_obs.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    out += f"\n[recorded] {path.name}"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(out)
+    if "[FAIL]" in out:
+        raise SystemExit(1)

@@ -89,9 +89,11 @@ def bench_workloads(quick: bool):
                       max_steps=4 * horizon)
         s = r.summary()
         res[name] = s
-        rows.append([name, s["n_arrived"], s["n_completed"],
-                     f"{s['drop_rate']:.3f}", f"{s['tok_per_s']:.1f}",
-                     f"{s['p50']:.0f}", f"{s['p99']:.0f}",
+        # latency/drop stats come off the result's own properties — the
+        # one shared implementation the obs health snapshot reads too
+        rows.append([name, r.n_arrived, r.n_completed,
+                     f"{r.drop_rate:.3f}", f"{r.tok_per_s:.1f}",
+                     f"{r.p50:.0f}", f"{r.p99:.0f}",
                      f"{s['mean_occupancy']:.2f}"])
     txt = table(
         f"Online serving (slots={sz['n_slots']}, chunk="
@@ -137,9 +139,9 @@ def bench_fleet_replay(quick: bool):
              replay_max_dvp_mv=float(wear.max()),
              replay_spread_mv=float(wear.max() - wear.min()))
 
-    rows = [[f"fleet x{N} (wear_level)", s["n_arrived"], s["n_completed"],
-             f"{s['drop_rate']:.3f}", f"{s['tok_per_s']:.1f}",
-             f"{s['p50']:.0f}", f"{s['p99']:.0f}",
+    rows = [[f"fleet x{N} (wear_level)", r.n_arrived, r.n_completed,
+             f"{r.drop_rate:.3f}", f"{r.tok_per_s:.1f}",
+             f"{r.p50:.0f}", f"{r.p99:.0f}",
              f"{util.mean():.2f}"]]
     txt = table("Fleet online serving (diurnal) + occupancy -> aging "
                 "replay", ["mode", "arrived", "done", "drop", "tok/s",

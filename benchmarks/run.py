@@ -14,7 +14,7 @@ import sys
 import time
 
 SECTIONS = ("table1", "table2", "fig5", "scenarios", "sched",
-            "disruption", "kernels", "serve", "online", "mesh",
+            "disruption", "kernels", "serve", "online", "obs", "mesh",
             "resilience", "fig1b", "roofline")
 
 
@@ -95,6 +95,9 @@ def main():
     if "online" in want:
         from . import online_bench
         runners["online"] = online_bench.run
+    if "obs" in want:
+        from . import obs_bench
+        runners["obs"] = obs_bench.run
     if "mesh" in want:
         runners["mesh"] = _run_mesh_subprocess
     if "resilience" in want:

@@ -37,7 +37,6 @@ Entry points: :func:`run_sweep` (measure), :func:`fit_sweep` (fit),
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import json
@@ -54,12 +53,15 @@ from repro.core.resilience import (DEFAULT_LMAX, MEASURED_PATH,
 from repro.models import encdec
 from repro.models import transformer as tf
 from repro.models.layers import FaultConfig
+from repro.obs.metrics import REGISTRY
 
 # name -> number of times jax traced that evaluation body (cf.
 # serve.steps.TRACE_COUNTS).  The whole BER x operator grid is one vmapped
 # call, so a model's characterisation must tick "grid_eval" exactly once —
 # and repeat sweeps (new seeds / BER values, same grid length) not at all.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# Registry-homed (repro.obs.metrics.trace_counts folds it into the unified
+# retrace guard) but still a plain collections.Counter.
+TRACE_COUNTS = REGISTRY.trace_counter("resilience_sweep")
 
 # log10-uniform BER grids.  The full grid spans the published curves'
 # dynamic range (Fig. 1b: 1e-7 .. 1e-3) plus headroom on both sides so the

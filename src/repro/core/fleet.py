@@ -193,6 +193,21 @@ class FleetRuntime:
         """(N, O, T) lifetime trajectories (lazily computed, cached)."""
         return self._ensure_trajs()
 
+    @property
+    def unit_scenario(self) -> Scenario:
+        """The per-aging-unit scenario: the device scenario itself when
+        unsharded, the device-major shard-repeated view when ``n_shards >
+        1`` — what threshold evaluation and the obs health snapshot
+        consume (one leaf row per aging unit)."""
+        return self._unit_scenario
+
+    def health(self, **kw):
+        """Fleet "aging odometer" snapshot — convenience delegate to
+        :func:`repro.obs.health.fleet_health` (lazy import: the obs layer
+        depends on core, never the reverse)."""
+        from repro.obs.health import fleet_health
+        return fleet_health(self, **kw)
+
     # ------------------------------------------------------------------ #
     def apply_load(self, loads=None, *, workload="diurnal",
                    router="wear_level", util_trace=None,

@@ -47,6 +47,15 @@ from repro.train.steps import init_train_state
 YEAR_S = 365.25 * 24 * 3600.0
 
 
+def _print_cache_stats():
+    """``--stats``: per-cache compiled-fn hit/miss/evict table."""
+    from repro.serve.engine import cache_stats
+    print("[serve] compiled-fn caches (hit/miss/evict, size):")
+    for name, s in sorted(cache_stats().items()):
+        print(f"    {name:<20} {s['hits']:>5} {s['misses']:>5} "
+              f"{s['evictions']:>5}   {s['currsize']}/{s['maxsize']}")
+
+
 def main(argv=None):
     import sys
     argv_list = list(sys.argv[1:] if argv is None else argv)
@@ -123,6 +132,9 @@ def main(argv=None):
     ap.add_argument("--eager", action="store_true",
                     help="per-token oracle loop instead of the scanned "
                          "single-dispatch path (single-device only)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-cache compiled-fn hit/miss/evict "
+                         "stats after the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -198,6 +210,8 @@ def main(argv=None):
         for i in range(args.n_devices):
             print(f"    dev{i} ({res.ages_years[i]:.1f}y): "
                   f"{res.tokens[i, 0][:12].tolist()}")
+        if args.stats:
+            _print_cache_stats()
         return res
 
     engine = ServeEngine(cfg, params, runtime=fleet,
@@ -216,6 +230,8 @@ def main(argv=None):
           f"(x{len(res.bers)} domains)")
     print(f"[serve] generated {res.tokens.shape} tokens; "
           f"first row: {res.tokens[0][:12].tolist()}")
+    if args.stats:
+        _print_cache_stats()
     return res
 
 
@@ -274,6 +290,8 @@ def _run_mesh(args, cfg, params, pol):
         print(f"  shard{s} {row}")
     print(f"[serve] generated {res.tokens.shape} tokens; "
           f"first row: {res.tokens[0][:12].tolist()}")
+    if args.stats:
+        _print_cache_stats()
     return res
 
 

@@ -1,0 +1,20 @@
+"""Observability layer: metrics registry, in-scan taps, health, export.
+
+Import DAG discipline: :mod:`repro.obs.metrics` is a plain-Python leaf
+(no jax, no repro imports) so any layer may depend on it;
+:mod:`repro.obs.taps` adds jax-side tap helpers; :mod:`repro.obs.health`
+and :mod:`repro.obs.export` sit on top and only ever import *down* (or
+lazily), so serve/sched/calibrate can import obs without cycles.
+
+Keep this module light — submodules hold the real surface.  The eager
+re-exports below are the host-side spine everything else hangs off.
+"""
+from .metrics import (REGISTRY, Counter, Gauge, MetricsRegistry, Sample,
+                      StreamingHistogram, TraceCounter, cache_stats,
+                      clear_caches, observe_span, trace_counts)
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "MetricsRegistry", "Sample",
+    "StreamingHistogram", "TraceCounter", "cache_stats", "clear_caches",
+    "observe_span", "trace_counts",
+]

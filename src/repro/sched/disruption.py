@@ -120,6 +120,15 @@ def run_flash_crowd(cal: Optional[Calibration] = None, *,
             np.asarray(cos.util, np.float64)[surge].sum()
             / max(np.asarray(cos.load, np.float64)[surge].sum(), 1e-12)),
     })
+    if cos.boosts is not None:
+        # odometer tap (:attr:`CoSimTrajectory.boosts`): the surge shows
+        # up as a burst of AVS boost events — overload heats the node,
+        # delays blow through ``dmax``, supplies climb
+        bo = np.asarray(cos.boosts, np.float64)
+        report.update({
+            "boost_events": float(bo.sum()),
+            "boost_events_surge": float(bo[surge].sum()),
+        })
     if tn is not None:
         # fleet-MEAN temperature carries the surge signature: individual
         # devices already hit their full-load steady state in normal

@@ -19,11 +19,13 @@ initial state entering as traced arguments, so re-routing new traffic
 (or resuming from a different fleet age) re-jits NOTHING.
 ``TRACE_COUNTS`` ticks once per trace exactly like
 ``repro.serve.steps.TRACE_COUNTS`` and is regression-guarded by
-``tests/test_sched.py`` and ``benchmarks/sched_bench.py``.
+``tests/test_sched.py`` and ``benchmarks/sched_bench.py``; it now lives
+in the metrics registry (:func:`repro.obs.metrics.trace_counts` folds it
+into the unified retrace guard) while keeping the plain-``Counter``
+protocol.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Any, Dict, Optional
@@ -38,10 +40,14 @@ from repro.core.constants import V_NOM
 from repro.core.delay import DelayPolynomial
 from repro.core.scenario import SCENARIO_FIELDS, LifetimeTrajectory, Scenario
 
+from repro.obs.metrics import REGISTRY
+
 from .router import Router, get_router
 from .workload import Workload
 
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# Registry-homed trace counter; still a collections.Counter, so the
+# historical ``dict(TRACE_COUNTS)`` before/after idiom keeps working.
+TRACE_COUNTS = REGISTRY.trace_counter("sched_lifetime")
 
 # Default scheduling resolution: enough epochs that a 24-epoch diurnal
 # period repeats ~20x over the horizon, cheap enough for CPU CI.
@@ -138,9 +144,13 @@ class CoSimTrajectory:
     # corresponding dynamics are disabled — the legacy trajectory shape)
     rec: Any = None         # (E, N, O, P) relaxed (recovered) pool [mV]
     t_node: Any = None      # (E, N) thermal-node temperature [K]
+    # telemetry tap: per-epoch AVS boost-event counts (summed over
+    # operator domains); zeros when AVS is disabled, None on trajectories
+    # predating the obs layer
+    boosts: Any = None      # (E, N) boost events this epoch
 
     _FIELDS = ("t", "load", "util", "V", "delay", "dvp", "dvn", "dv",
-               "rec", "t_node")
+               "rec", "t_node", "boosts")
 
     def tree_flatten(self):
         return tuple(getattr(self, f) for f in self._FIELDS), None
@@ -280,6 +290,8 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
             delay = poly(dvp * 1e-3, dvn * 1e-3, v)
 
             if avs_enabled:
+                v_pre = v
+
                 def boost(_, vd):
                     v_, d_ = vd
                     need = (d_ > dmax) & (v_ < v_max - 1e-6)
@@ -288,8 +300,12 @@ def _cosim_fn(router: Optional[Router], n_epochs: int, n_devices: int,
 
                 v, delay = jax.lax.fori_loop(0, max_boosts, boost,
                                              (v, delay))
+                # telemetry: boost events = steps the supply climbed
+                boosts = jnp.sum((v - v_pre) / v_step, axis=-1)
+            else:
+                boosts = jnp.zeros((n_devices,), jnp.float32)
             out = {"util": util, "V": v, "delay": delay,
-                   "dvp": dvp, "dvn": dvn, "dv": dv}
+                   "dvp": dvp, "dvn": dvn, "dv": dv, "boosts": boosts}
             if short_term:
                 out["rec"] = rec
             if thermal:
@@ -426,7 +442,8 @@ def cosimulate(params: AgingParams, poly: DelayPolynomial,
                            util=out["util"], V=out["V"],
                            delay=out["delay"], dvp=out["dvp"],
                            dvn=out["dvn"], dv=out["dv"],
-                           rec=out.get("rec"), t_node=out.get("t_node"))
+                           rec=out.get("rec"), t_node=out.get("t_node"),
+                           boosts=out.get("boosts"))
 
 
 # --------------------------------------------------------------------------- #

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Dict, Optional
 
 import jax
@@ -46,6 +47,8 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.core.fleet import FleetRuntime
 from repro.models.layers import FaultConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs.taps import taps_enabled, telemetry_to_host
 from . import steps
 
 
@@ -55,6 +58,10 @@ class GenerateResult:
     bers: Dict[str, float]       # per-operator BER used
     age_years: float
     power_w: float
+    # per-step tap series ({name: (n_steps,)}) when taps are enabled
+    # (repro.obs.taps.enable_taps); None otherwise — the compiled graph
+    # and the tokens are identical either way
+    telemetry: Optional[Dict[str, np.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -64,6 +71,7 @@ class FleetGenerateResult:
     operators: tuple             # column order of ``bers``
     ages_years: np.ndarray       # (N,)
     power_w: np.ndarray          # (N,)
+    telemetry: Optional[Dict[str, np.ndarray]] = None   # {name: (N, steps)}
 
 
 # --------------------------------------------------------------------------- #
@@ -77,7 +85,11 @@ class FleetGenerateResult:
 # slot-prefill/decode-chunk caches through the same mechanism).
 COMPILE_CACHE_MAXSIZE = 32
 
-_COMPILE_CACHES: list = []
+# The registry itself now lives in the (dependency-free) obs layer so
+# health snapshots and exporters can read cache stats without importing
+# serve; this module keeps the historical name as an alias to the SAME
+# list object — ``CompiledFnCache.__init__`` still appends here.
+_COMPILE_CACHES: list = obs_metrics._CACHES
 
 
 class CompiledFnCache:
@@ -128,14 +140,19 @@ def compile_cache(name: str):
 
 
 def cache_stats() -> Dict[str, Dict[str, int]]:
-    """Per-cache ``{currsize, maxsize, hits, misses, evictions}``."""
-    return {c.name: c.stats() for c in _COMPILE_CACHES}
+    """Per-cache ``{currsize, maxsize, hits, misses, evictions}``.
+
+    Back-compat alias for :func:`repro.obs.metrics.cache_stats`.
+    """
+    return obs_metrics.cache_stats()
 
 
 def clear_caches() -> None:
-    """Drop every cached compiled function (and its XLA executables)."""
-    for c in _COMPILE_CACHES:
-        c.clear()
+    """Drop every cached compiled function (and its XLA executables).
+
+    Back-compat alias for :func:`repro.obs.metrics.clear_caches`.
+    """
+    obs_metrics.clear_caches()
 
 
 @compile_cache("step_fns")
@@ -250,10 +267,21 @@ class ServeEngine:
         prompts = jnp.asarray(prompts, jnp.int32)
         extras = self._extras(prefix_embeds, frames)
 
+        telemetry = None
         if scan:
+            m0 = _generate_fn.misses
             gen = _generate_fn(cfg, self.max_len, int(n_steps), top_k)
-            tokens = np.asarray(gen(self.params, prompts, fi, call_key,
-                                    temp, *extras))
+            t0 = time.perf_counter()
+            tokens_dev, telem = gen(self.params, prompts, fi, call_key,
+                                    temp, *extras)
+            tokens = np.asarray(tokens_dev)
+            span = time.perf_counter() - t0
+            # host-side only: whether to transfer + record the aux leaves;
+            # the compiled dispatch above is identical either way
+            if taps_enabled():
+                telemetry = telemetry_to_host(telem)
+                self._record(tokens, telemetry, span,
+                             cold=_generate_fn.misses > m0)
         else:
             tokens = self._generate_eager(prompts, int(n_steps), fi,
                                           call_key, temp, top_k, extras)
@@ -264,7 +292,27 @@ class ServeEngine:
             bers={k: float(v) for k, v in bers.items()},
             age_years=self.runtime.age_years if self.runtime else 0.0,
             power_w=self.runtime.total_power() if self.runtime else 0.0,
+            telemetry=telemetry,
         )
+
+    def _record(self, tokens, telemetry, span_s: float, cold: bool) -> None:
+        """Fold one generate call into the metrics registry (host-side)."""
+        reg = obs_metrics.REGISTRY
+        reg.counter("serve_generate_calls", "generate() dispatches").inc()
+        reg.counter("serve_tokens", "tokens generated").inc(tokens.size)
+        name = ("serve_generate_compile_s" if cold
+                else "serve_generate_warm_s")
+        obs_metrics.observe_span(name, span_s)
+        for sig in ("logit_max", "logit_margin"):
+            if telemetry and sig in telemetry:
+                reg.histogram("serve_" + sig, "per-step serving health") \
+                   .observe_many(np.asarray(telemetry[sig]).ravel())
+        if self.runtime is not None:
+            bers = self.runtime.op_bers()
+            if bers:
+                reg.gauge("serve_admitted_ber_max",
+                          "worst per-operator BER served") \
+                   .set(max(float(v) for v in bers.values()))
 
     def _generate_eager(self, prompts, n_steps, fi, key, temp, top_k,
                         extras) -> np.ndarray:
@@ -435,15 +483,32 @@ class FleetServeEngine:
             extras = (self._shard(prefix_embeds, "prefix_embeds",
                                   lane_ndim=4),)
 
+        m0 = _fleet_generate_fn.misses
         gen = _fleet_generate_fn(cfg, self.max_len, int(n_steps), top_k)
-        tokens = gen(self.params, prompts, fi, keys,
-                     jnp.float32(temperature), *extras)
+        t0 = time.perf_counter()
+        tokens, telem = gen(self.params, prompts, fi, keys,
+                            jnp.float32(temperature), *extras)
+        tokens = np.asarray(tokens)
+        span = time.perf_counter() - t0
+        telemetry = None
+        if taps_enabled():
+            # vmapped dispatch: every tap leaf carries the lane axis (N, T)
+            telemetry = telemetry_to_host(telem)
+            reg = obs_metrics.REGISTRY
+            reg.counter("fleet_generate_calls",
+                        "fleet generate() dispatches").inc()
+            reg.counter("serve_tokens", "tokens generated").inc(tokens.size)
+            obs_metrics.observe_span(
+                "fleet_generate_compile_s"
+                if _fleet_generate_fn.misses > m0
+                else "fleet_generate_warm_s", span)
 
         snap = self.fleet.snapshot()
         return FleetGenerateResult(
-            tokens=np.asarray(tokens),
+            tokens=tokens,
             bers=np.asarray(snap.ber),
             operators=self.fleet.operators,
             ages_years=np.asarray(self.fleet.ages_years),
             power_w=np.asarray(self.fleet.fleet_power()),
+            telemetry=telemetry,
         )

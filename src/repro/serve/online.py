@@ -51,6 +51,8 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.core.fleet import FleetRuntime
 from repro.models.layers import FaultConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs.taps import taps_enabled, telemetry_to_host
 
 from . import engine as serve_engine
 from . import slots as slots_mod
@@ -180,6 +182,13 @@ class OnlineServeResult:
     (empty system waiting on arrivals) appear as all-False rows: the
     duty cycle the hardware actually sustained, which
     :meth:`lane_utilization` resamples onto the aging epoch grid.
+
+    ``telemetry`` holds the in-scan tap series harvested from the decode
+    chunks when taps were enabled (:func:`repro.obs.taps.enable_taps`):
+    ``{name: (T_served,)}`` for a single device, ``{name: (N, T_served)}``
+    for a fleet, covering the steps the device actually decoded (idle
+    clock skips carry no taps).  ``None`` when taps were off — the served
+    tokens are identical either way.
     """
 
     completed: List[Request]
@@ -189,6 +198,7 @@ class OnlineServeResult:
     total_steps: int
     wall_s: float
     n_tokens: int
+    telemetry: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def n_completed(self) -> int:
@@ -201,6 +211,18 @@ class OnlineServeResult:
     @property
     def tok_per_s(self) -> float:
         return self.n_tokens / max(self.wall_s, 1e-9)
+
+    # the one shared latency-quantile implementation: engines, benchmarks
+    # and the obs health snapshot all read these properties
+    @property
+    def p50(self) -> float:
+        """Median request latency [decode steps] (NaN with no completions)."""
+        return self.latency_percentiles((50.0,))["p50"]
+
+    @property
+    def p99(self) -> float:
+        """p99 request latency [decode steps] (NaN with no completions)."""
+        return self.latency_percentiles((99.0,))["p99"]
 
     def latencies(self) -> np.ndarray:
         """Request latencies [decode steps], one per completed request."""
@@ -243,6 +265,23 @@ class OnlineServeResult:
                                                 np.float64).mean())}
         d.update(self.latency_percentiles())
         return d
+
+
+def _record_online(res: "OnlineServeResult") -> None:
+    """Fold one finished online run into the metrics registry."""
+    reg = obs_metrics.REGISTRY
+    reg.counter("online_requests_arrived", "requests offered").inc(
+        res.n_arrived)
+    reg.counter("online_requests_dropped",
+                "requests dropped at admission").inc(res.n_dropped)
+    reg.counter("online_requests_completed", "requests completed").inc(
+        res.n_completed)
+    reg.counter("serve_tokens", "tokens generated").inc(res.n_tokens)
+    reg.histogram("online_latency_steps",
+                  "request latency [decode steps]") \
+       .observe_many(res.latencies())
+    reg.gauge("online_drop_rate", "drop rate of the last run").set(
+        res.drop_rate)
 
 
 # --------------------------------------------------------------------------- #
@@ -364,6 +403,7 @@ class OnlineServeEngine:
         live: Dict[int, Request] = {}
         completed: List[Request] = []
         occ_rows: List[np.ndarray] = []
+        telem_rows: List[Dict[str, np.ndarray]] = []
         now = 0                       # host service clock [decode steps]
         wall0 = time.perf_counter()
 
@@ -414,10 +454,12 @@ class OnlineServeEngine:
                 now += skip
                 continue
             # ---- one compiled decode chunk --------------------------- #
-            slots, active_trace = chunk_fn(self.params, slots, fi, temp,
-                                           eos)
+            slots, active_trace, telem = chunk_fn(self.params, slots, fi,
+                                                  temp, eos)
             trace = np.asarray(active_trace)          # (chunk, K)
             occ_rows.append(trace)
+            if taps_enabled():       # host-side read of the always-on taps
+                telem_rows.append(telemetry_to_host(telem))
             now += self.chunk_steps
             self._harvest(slots, live, completed, now, trace=trace)
 
@@ -431,11 +473,18 @@ class OnlineServeEngine:
                      else np.zeros((0, K), bool))
         n_tokens = int(sum(r.n_generated for r in completed))
         n_tokens += int(sum(r.n_generated for r in live.values()))
-        return OnlineServeResult(
+        telemetry = None
+        if telem_rows:
+            telemetry = {k: np.concatenate([row[k] for row in telem_rows])
+                         for k in telem_rows[0]}
+        result = OnlineServeResult(
             completed=completed, occupancy=occupancy,
             n_arrived=queue.n_arrived, n_dropped=queue.n_dropped,
             total_steps=now, wall_s=time.perf_counter() - wall0,
-            n_tokens=n_tokens)
+            n_tokens=n_tokens, telemetry=telemetry)
+        if taps_enabled():
+            _record_online(result)
+        return result
 
     # ------------------------------------------------------------------ #
     def _harvest(self, slots: SlotState, live: Dict[int, Request],
@@ -569,6 +618,7 @@ class OnlineFleetEngine:
         live: Dict[tuple, Request] = {}          # (lane, slot) -> Request
         completed: List[Request] = []
         occ_rows: List[np.ndarray] = []
+        telem_rows: List[Dict[str, np.ndarray]] = []
         util_prev = np.zeros((N,), np.float64)   # measured, fed back
         wear = self._wear()
         now = 0
@@ -645,11 +695,13 @@ class OnlineFleetEngine:
                 now += skip
                 continue
             # ---- one vmapped decode chunk over all lanes ------------- #
-            slots, active_trace = chunk_fn(self.params, slots, fi, temp,
-                                           eos)
+            slots, active_trace, telem = chunk_fn(self.params, slots, fi,
+                                                  temp, eos)
             trace = np.asarray(active_trace)         # (N, chunk, K)
             trace = np.moveaxis(trace, 0, 1)         # (chunk, N, K)
             occ_rows.append(trace)
+            if taps_enabled():   # vmapped taps: leaves are (N, chunk)
+                telem_rows.append(telemetry_to_host(telem))
             util_prev = trace.mean(axis=(0, 2))      # measured duty (N,)
             now += self.chunk_steps
             self._harvest(slots, live, completed, now, trace=trace)
@@ -664,11 +716,19 @@ class OnlineFleetEngine:
                      else np.zeros((0, N, K), bool))
         n_tokens = int(sum(r.n_generated for r in completed))
         n_tokens += int(sum(r.n_generated for r in live.values()))
-        return OnlineServeResult(
+        telemetry = None
+        if telem_rows:               # (N, chunk) rows -> (N, T_served)
+            telemetry = {k: np.concatenate([row[k] for row in telem_rows],
+                                           axis=-1)
+                         for k in telem_rows[0]}
+        result = OnlineServeResult(
             completed=completed, occupancy=occupancy,
             n_arrived=queue.n_arrived, n_dropped=queue.n_dropped,
             total_steps=now, wall_s=time.perf_counter() - wall0,
-            n_tokens=n_tokens)
+            n_tokens=n_tokens, telemetry=telemetry)
+        if taps_enabled():
+            _record_online(result)
+        return result
 
     # ------------------------------------------------------------------ #
     def _harvest(self, slots: SlotState, live: Dict[tuple, Request],

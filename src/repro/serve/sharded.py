@@ -32,7 +32,8 @@ contract rests on (see the module docstring of
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,8 @@ from repro.configs import ModelConfig
 from repro.core.fleet import FleetRuntime
 from repro.distributed import sharding as shrules
 from repro.models.layers import FaultConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs.taps import taps_enabled, telemetry_to_host
 from . import steps
 from .engine import ServeEngine, compile_cache
 
@@ -54,6 +57,7 @@ class MeshGenerateResult:
     operators: tuple             # column order of ``bers``
     ages_years: np.ndarray       # (S,) per-shard ages
     power_w: float
+    telemetry: Optional[Dict[str, np.ndarray]] = None   # {name: (steps,)}
 
 
 def default_serve_mesh(tp: Optional[int] = None) -> Mesh:
@@ -221,10 +225,25 @@ class MeshServeEngine:
         temp = put(ServeEngine._temperature(greedy, temperature))
         call_key = put(call_key)
 
+        m0 = _mesh_generate_fn.misses
         gen = _mesh_generate_fn(cfg, self.max_len, int(n_steps), top_k,
                                 self.mesh)
-        tokens = np.asarray(gen(self.params, prompts, fi, call_key, temp,
-                                *extras))
+        t0 = time.perf_counter()
+        tokens, telem = gen(self.params, prompts, fi, call_key, temp,
+                            *extras)
+        tokens = np.asarray(tokens)
+        span = time.perf_counter() - t0
+        telemetry = None
+        if taps_enabled():
+            # taps are replicated scalars per step under the serve layout —
+            # one host transfer, no extra collectives
+            telemetry = telemetry_to_host(telem)
+            obs_metrics.REGISTRY.counter(
+                "mesh_generate_calls", "sharded generate() dispatches").inc()
+            obs_metrics.observe_span(
+                "mesh_generate_compile_s"
+                if _mesh_generate_fn.misses > m0
+                else "mesh_generate_warm_s", span)
 
         if self.fleet is not None:
             ops = self.fleet.operators
@@ -242,4 +261,5 @@ class MeshServeEngine:
             ops, bers = (), np.zeros((1, 0))
             ages, power = np.zeros(1), 0.0
         return MeshGenerateResult(tokens=tokens, bers=bers, operators=ops,
-                                  ages_years=ages, power_w=power)
+                                  ages_years=ages, power_w=power,
+                                  telemetry=telemetry)

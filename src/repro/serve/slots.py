@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.configs import ModelConfig
 from repro.models import transformer as tf
+from repro.obs.taps import Telemetry, logit_taps
 
 from . import steps
 
@@ -197,7 +198,7 @@ def make_prefill_slots_fn(cfg: ModelConfig, max_len: int,
 def make_decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
                          top_k: Optional[int] = None) -> Callable:
     """Build ``chunk(params, slots, fi, temperature, eos) ->
-    (SlotState, active_trace)``.
+    (SlotState, active_trace, telemetry)``.
 
     One ``lax.scan`` advances every slot ``chunk_steps`` decode steps:
     per-slot ragged depths enter :func:`repro.models.transformer.decode_step`
@@ -206,7 +207,11 @@ def make_decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
     completion masks (EOS hit or budget exhausted) retire slots in-scan.
     ``active_trace`` is the ``(chunk_steps, K)`` occupancy matrix — which
     slots actually served each step, the duty-cycle measurement the fleet
-    aging replay consumes.
+    aging replay consumes.  ``telemetry`` is a
+    :class:`repro.obs.taps.Telemetry` of per-step ``(chunk_steps,)`` health
+    series (:func:`repro.obs.taps.logit_taps` masked to live slots —
+    inactive slots' garbage logits never pollute the signal), always
+    computed in-graph so reading it can never retrace.
     """
     _check_family(cfg)
     decode = steps.make_decode_fn(cfg)
@@ -240,10 +245,10 @@ def make_decode_chunk_fn(cfg: ModelConfig, chunk_steps: int,
                 active=active0 & ~done,
                 n_generated=jnp.where(active0, ngen, s.n_generated),
                 tokens=tokens, key=key, step=t)
-            return new, active0
+            return new, (active0, logit_taps(logits, active=active0))
 
-        slots, active_trace = jax.lax.scan(body, slots, None,
-                                           length=chunk_steps)
-        return slots, active_trace
+        slots, (active_trace, taps) = jax.lax.scan(body, slots, None,
+                                                   length=chunk_steps)
+        return slots, active_trace, Telemetry(taps)
 
     return chunk

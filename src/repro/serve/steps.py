@@ -37,10 +37,16 @@ GSPMD route, so routing never changes sampled tokens).
 ``TRACE_COUNTS`` ticks once per *trace* of each built function (the Python
 body only runs while jax traces) — the regression tests assert repeated
 ``generate()`` calls on an aged runtime add zero counts.
+
+:func:`make_generate_fn` additionally returns a
+:class:`repro.obs.taps.Telemetry` bundle of per-step serving-health
+scalars next to the tokens.  The taps are computed unconditionally inside
+the one trace (O(batch) per step — see :func:`repro.obs.taps.logit_taps`),
+so enabling/disabling telemetry at the engine layer neither retraces nor
+perturbs the sampled tokens.
 """
 from __future__ import annotations
 
-import collections
 from typing import Callable, Optional
 
 import jax
@@ -50,11 +56,15 @@ from repro.configs import ModelConfig
 from repro.models import encdec
 from repro.models import transformer as tf
 from repro.models.layers import FaultConfig
+from repro.obs.metrics import REGISTRY
+from repro.obs.taps import Telemetry, logit_taps
 
 # name -> number of times jax traced that step body.  jit caches traces, so
 # a steady-state serve loop must not tick these; see
 # tests/test_serve_scanned.py::test_repeated_generate_zero_retrace.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# Registry-homed (``repro.obs.metrics.trace_counts`` folds it into the
+# unified retrace guard) but still a plain ``collections.Counter``.
+TRACE_COUNTS = REGISTRY.trace_counter("serve_steps")
 
 
 def _fi_step(fi: Optional[FaultConfig], step):
@@ -170,8 +180,13 @@ def make_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
     """Build the single-dispatch generation function.
 
     Returns ``generate(params, prompts, fi, key, temperature[, extras])
-    -> tokens (B, n_steps)`` where ``extras`` is ``prefix_embeds`` for
-    prefix (VLM) families and ``frames`` for encoder-decoder families.
+    -> (tokens (B, n_steps), telemetry)`` where ``extras`` is
+    ``prefix_embeds`` for prefix (VLM) families and ``frames`` for
+    encoder-decoder families.  ``telemetry`` is a
+    :class:`repro.obs.taps.Telemetry` of per-step ``(n_steps,)`` health
+    series (:func:`repro.obs.taps.logit_taps`), always computed in-graph;
+    callers that ignore it pay one dead-code-eliminated tuple slot, and
+    the tokens are bit-identical whether or not anyone reads it.
     Prefill, a ``lax.scan`` over ``n_steps - 1`` decode steps, and
     sampling all live in one trace:
 
@@ -203,6 +218,7 @@ def make_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
         kv = out[2] if has_kv else None
         key, sub = jax.random.split(key)
         tok = sample_token(logits, sub, temperature, top_k)
+        tap0 = logit_taps(logits)
         cache_len0 = S + cfg.prefix_tokens
 
         def body(carry, t):
@@ -217,12 +233,18 @@ def make_generate_fn(cfg: ModelConfig, max_len: int, n_steps: int,
                                        cache_len, fi_t)
             key, sub = jax.random.split(key)
             tok = sample_token(logits, sub, temperature, top_k)
-            return (tok, cache, key), tok
+            return (tok, cache, key), (tok, logit_taps(logits))
 
-        (_, _, _), toks = jax.lax.scan(
+        (_, _, _), (toks, taps) = jax.lax.scan(
             body, (tok, cache, key), jnp.arange(1, n_steps, dtype=jnp.int32))
-        return jnp.concatenate([tok[:, None], toks.T], axis=1) \
-            if n_steps > 1 else tok[:, None]
+        if n_steps > 1:
+            tokens = jnp.concatenate([tok[:, None], toks.T], axis=1)
+            series = {k: jnp.concatenate([tap0[k][None], taps[k]])
+                      for k in tap0}
+        else:
+            tokens = tok[:, None]
+            series = {k: tap0[k][None] for k in tap0}
+        return tokens, Telemetry(series)
     return generate
 
 

@@ -1,0 +1,193 @@
+"""Metrics registry + export pipeline: streaming-histogram quantile
+accuracy against ``np.quantile`` (property-tested over random streams),
+exact merge associativity, registry get-or-create semantics, and the
+JSONL / Prometheus export round-trips."""
+import json
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import (MetricsRegistry, Sample, StreamingHistogram,
+                               TraceCounter)
+
+
+def _hist(values, growth=1.05, name="h"):
+    h = StreamingHistogram(name, growth=growth)
+    h.observe_many(values)
+    return h
+
+
+# --------------------------------------------------------------------------- #
+# streaming-histogram quantiles: rank-tolerance vs np.quantile
+# --------------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 400),
+       q=st.floats(0.01, 0.99),
+       scale=st.sampled_from(["uniform", "lognormal", "heavy"]))
+def test_quantile_within_relative_rank_tolerance(seed, n, q, scale):
+    """The estimate sits within a ``growth`` factor of the exact order
+    statistic at the target rank: at least ``ceil(q*n)`` observations lie
+    at or below ``est*growth`` and fewer than that lie below
+    ``est/growth`` (tolerance slightly widened for float rounding)."""
+    rng = np.random.default_rng(seed)
+    if scale == "uniform":
+        data = rng.uniform(0.0, 10.0, n)
+    elif scale == "lognormal":
+        data = rng.lognormal(0.0, 2.0, n)
+    else:                                    # heavy tail + zeros
+        data = rng.pareto(1.5, n) * rng.integers(0, 2, n)
+    g = 1.05
+    est = _hist(data, growth=g).quantile(q)
+    k = int(math.ceil(q * n))
+    tol = g * 1.000001
+    assert np.sum(data <= est * tol) >= k
+    assert np.sum(data < est / tol) < k
+
+
+def test_quantile_exact_stats_and_edges():
+    data = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 0.0]
+    h = _hist(data)
+    assert h.count == len(data)
+    assert h.sum == pytest.approx(sum(data))
+    assert h.min == 0.0 and h.max == 9.0
+    # q=0 / q=1 clamp to the exact running extrema
+    assert h.quantile(0.0) == 0.0
+    assert h.quantile(1.0) == pytest.approx(9.0, rel=0.05)
+    assert math.isnan(StreamingHistogram("e").quantile(0.5))
+    assert math.isnan(StreamingHistogram("e").mean)
+
+
+def test_nonpositive_bucket_quantile_is_exact_min():
+    h = _hist([-2.0, -1.0, 0.0, 5.0])
+    assert h.quantile(0.25) == -2.0          # underflow bucket -> min
+    assert h.n_nonpos == 3
+
+
+# --------------------------------------------------------------------------- #
+# merge: exactly associative, order-independent, equals single-stream
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_merge_associative_and_equals_single_stream(seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = (rng.lognormal(0.0, 1.5, rng.integers(1, 120))
+               for _ in range(3))
+    ha, hb, hc = _hist(a), _hist(b), _hist(c)
+    left = ha.merge(hb).merge(hc)
+    right = ha.merge(hb.merge(hc))
+    assert left.state() == right.state()     # exact, not approximate
+    assert hb.merge(ha).state() == ha.merge(hb).state()
+    # vs one sequential stream: buckets/counts/extrema are identical;
+    # `sum` only up to float addition order
+    single = _hist(np.concatenate([a, b, c])).state()
+    merged = left.state()
+    assert merged.pop("sum") == pytest.approx(single.pop("sum"))
+    assert merged == single
+
+
+def test_merge_growth_mismatch_rejected():
+    with pytest.raises(AssertionError):
+        _hist([1.0], growth=1.05).merge(_hist([1.0], growth=1.10))
+
+
+# --------------------------------------------------------------------------- #
+# registry semantics
+# --------------------------------------------------------------------------- #
+def test_registry_get_or_create_and_type_conflict():
+    r = MetricsRegistry()
+    assert r.counter("c") is r.counter("c")
+    assert r.histogram("h") is r.histogram("h")
+    with pytest.raises(AssertionError):
+        r.gauge("c")                         # name already a Counter
+    r.counter("c").inc(2)
+    r.gauge("g").set(1.5)
+    tc = r.trace_counter("sites")
+    tc["body"] += 3
+    names = {s.name for s in r.collect()}
+    assert {"c_total", "g", "h_count", "repro_trace_total"} <= names
+    assert obs_metrics.trace_counts(r) == {"sites.body": 3}
+    r.reset()
+    assert r.counter("c").value == 0.0
+    assert obs_metrics.trace_counts(r) == {}
+
+
+def test_trace_counter_keeps_counter_protocol():
+    tc = TraceCounter("t")
+    tc["a"] += 1
+    tc["a"] += 1
+    before = dict(tc)
+    tc["b"] += 1
+    assert dict(tc) != before and tc["a"] == 2
+    tc.clear()
+    assert dict(tc) == {}
+
+
+def test_compile_caches_visible_through_registry():
+    """CompiledFnCache registers with obs at construction; the serve-layer
+    aliases stay the same objects (back-compat re-homing)."""
+    from repro.serve import engine
+    assert engine._COMPILE_CACHES is obs_metrics._CACHES
+    assert set(engine.cache_stats()) == set(obs_metrics.cache_stats())
+    names = {s.name for s in obs_metrics.REGISTRY.collect()}
+    assert "repro_compile_cache_misses_total" in names
+
+
+# --------------------------------------------------------------------------- #
+# export round-trips
+# --------------------------------------------------------------------------- #
+def _registry_with_data():
+    r = MetricsRegistry()
+    r.counter("reqs", help="requests served").inc(7)
+    r.gauge("ber_max").set(3.2e-5)
+    h = r.histogram("lat_s", help="latency [s]")
+    h.observe_many([0.01, 0.02, 0.5, 0.0])
+    r.trace_counter("sites")["gen,erate\"x"] += 2   # hostile label value
+    return r
+
+
+def test_prometheus_round_trip():
+    samples = _registry_with_data().collect()
+    text = obs_export.prometheus_text(samples)
+    back = obs_export.parse_prometheus(text)
+    orig = [(s.name, tuple(sorted(s.labels)), s.value, s.kind)
+            for s in samples]
+    assert [(s.name, s.labels, s.value, s.kind) for s in back] == orig
+    assert "# TYPE reqs_total counter" in text
+    assert "# HELP lat_s latency [s]" in text
+
+
+def test_jsonl_round_trip(tmp_path):
+    r = _registry_with_data()
+    samples = r.collect()
+    path = tmp_path / "run.jsonl"
+    n = obs_export.write_jsonl(
+        path, samples,
+        manifest=obs_export.run_manifest(run="t", extra_key=1),
+        health={"units": [{"unit": 0, "eta_years": None}]},
+        events=[{"what": "flash_crowd", "epoch": 3}])
+    manifest, back, other = obs_export.read_jsonl(path)
+    assert n == 3 + len(samples)
+    assert manifest["schema"] == obs_export.SCHEMA_VERSION
+    assert manifest["run"] == "t" and manifest["extra_key"] == 1
+    assert [(s.name, tuple(sorted(s.labels)), s.value, s.kind)
+            for s in samples] \
+        == [(s.name, s.labels, s.value, s.kind) for s in back]
+    kinds = [row["type"] for row in other]
+    assert kinds == ["health", "event"]
+    # every line is standalone JSON (streaming consumers)
+    for line in path.read_text().splitlines():
+        json.loads(line)
+
+
+def test_jsonl_nan_gauge_round_trips(tmp_path):
+    s = Sample("g", (), math.nan, "gauge")
+    path = tmp_path / "nan.jsonl"
+    obs_export.write_jsonl(path, [s])
+    _, back, _ = obs_export.read_jsonl(path)
+    assert len(back) == 1 and math.isnan(back[0].value)

@@ -1,0 +1,270 @@
+"""Telemetry taps: bit-exactness (taps on == taps off) across the serve,
+online, sharded and co-sim dispatch paths, zero retrace under the unified
+``trace_counts`` guard, the fleet health snapshot (co-sim and online
+runs), and the obs_report CLI + export pipeline end to end."""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.fleet import FleetRuntime
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs.taps import (Telemetry, cosim_taps, enable_taps,
+                            taps_enabled, telemetry_to_host)
+from repro.serve.engine import FleetServeEngine, ServeEngine
+from repro.serve.online import OnlineServeEngine, Request
+from repro.train.steps import init_train_state
+
+S, MAX_LEN = 8, 48
+YEAR_S = 365.25 * 24 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("deepseek_7b").reduced()
+    params = init_train_state(cfg, jax.random.PRNGKey(0)).params
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (3, S), 0, cfg.vocab), np.int32)
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def aged_fleet():
+    fl = FleetRuntime(n_devices=2)
+    fl.set_age(years=3.0, device=0)
+    fl.set_age(years=8.0, device=1)
+    return fl
+
+
+# --------------------------------------------------------------------------- #
+# bit-exact: the toggle is host-side, tokens cannot change
+# --------------------------------------------------------------------------- #
+def test_serve_taps_bit_exact_clean_and_faulted(setup):
+    cfg, params, prompts = setup
+    for rt in (None, _aged_device()):
+        kw = dict(runtime=rt, max_len=MAX_LEN, seed=5)
+        off = ServeEngine(cfg, params, **kw).generate(
+            prompts, 6, temperature=0.7)
+        assert off.telemetry is None
+        with enable_taps():
+            on = ServeEngine(cfg, params, **kw).generate(
+                prompts, 6, temperature=0.7)
+        np.testing.assert_array_equal(off.tokens, on.tokens)
+        assert set(on.telemetry) == {"logit_max", "logit_margin"}
+        assert on.telemetry["logit_max"].shape == (6,)
+        assert np.isfinite(on.telemetry["logit_margin"]).all()
+        assert (on.telemetry["logit_margin"] >= 0).all()
+
+
+def _aged_device():
+    rt = FleetRuntime(n_devices=1)
+    rt.set_age(years=9.0)
+    return rt
+
+
+def test_fleet_taps_bit_exact(setup, aged_fleet):
+    cfg, params, prompts = setup
+    tile = np.broadcast_to(prompts, (2,) + prompts.shape).copy()
+    off = FleetServeEngine(cfg, params, aged_fleet, max_len=MAX_LEN,
+                           seed=5).generate(tile, 5)
+    with enable_taps():
+        on = FleetServeEngine(cfg, params, aged_fleet, max_len=MAX_LEN,
+                              seed=5).generate(tile, 5)
+    np.testing.assert_array_equal(off.tokens, on.tokens)
+    assert off.telemetry is None
+    # vmapped dispatch: every tap leaf gains the lane axis
+    assert on.telemetry["logit_max"].shape == (2, 5)
+
+
+def test_mesh_taps_bit_exact(setup):
+    from repro.serve.sharded import MeshServeEngine
+    cfg, params, prompts = setup
+    off = MeshServeEngine(cfg, params, max_len=MAX_LEN, seed=3).generate(
+        prompts, 4)
+    with enable_taps():
+        on = MeshServeEngine(cfg, params, max_len=MAX_LEN,
+                             seed=3).generate(prompts, 4)
+    np.testing.assert_array_equal(off.tokens, on.tokens)
+    assert on.telemetry["logit_max"].shape == (4,)
+
+
+def test_online_taps_bit_exact(setup):
+    cfg, params, prompts = setup
+    def run():
+        eng = OnlineServeEngine(cfg, params, n_slots=2, max_len=MAX_LEN,
+                                max_new_cap=8, chunk_steps=4, seed=5)
+        return eng.serve([Request(id=i, prompt=prompts[i], max_new=6,
+                                  arrival=i) for i in range(3)],
+                         greedy=False, temperature=0.7, eos_id=-1)
+    off = run()
+    with enable_taps():
+        on = run()
+    assert off.telemetry is None and on.telemetry is not None
+    for a, b in zip(sorted(off.completed, key=lambda r: r.id),
+                    sorted(on.completed, key=lambda r: r.id)):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # one row per served chunk step, active-masked means stay finite
+    assert on.telemetry["logit_max"].ndim == 1
+    assert on.telemetry["logit_max"].shape[0] >= off.total_steps
+    assert np.isfinite(on.telemetry["logit_max"]).all()
+
+
+def test_cosim_bit_exact_and_boosts_tap(aged_fleet):
+    """apply_load's trajectory is identical with taps enabled, and the
+    in-scan boost-event counter is recorded either way (aux output of the
+    same dispatch)."""
+    def run():
+        fl = FleetRuntime(n_devices=2)
+        fl.set_age(years=3.0, device=0)
+        fl.set_age(years=8.0, device=1)
+        return fl.apply_load(workload="diurnal", utilization=0.7,
+                             horizon_s=2 * YEAR_S), fl
+    off, _ = run()
+    with enable_taps():
+        on, fl = run()
+    np.testing.assert_array_equal(np.asarray(off.dvp), np.asarray(on.dvp))
+    np.testing.assert_array_equal(np.asarray(off.V), np.asarray(on.V))
+    assert on.boosts is not None
+    boosts = np.asarray(on.boosts)                     # (E, N)
+    assert boosts.shape == np.asarray(on.util).shape
+    assert (boosts >= 0).all() and boosts.sum() > 0    # AVS actually boosted
+    telem = telemetry_to_host(cosim_taps(on, fl.unit_scenario))
+    assert telem["dvth_eff_mv"].shape == telem["boosts"].shape
+    n_dev = telem["dvth_eff_mv"].shape[0]
+    assert n_dev == 2
+    # the monotone total never falls below the recovery-aware effective
+    assert (telem["dvth_mono_mv"] >= telem["dvth_eff_mv"] - 1e-5).all()
+
+
+# --------------------------------------------------------------------------- #
+# zero retrace: the toggle and re-reads tick no trace counter
+# --------------------------------------------------------------------------- #
+def test_taps_toggle_zero_retrace(setup):
+    cfg, params, prompts = setup
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, seed=5)
+    eng.generate(prompts, 5)                           # warm the cache
+    before = obs_metrics.trace_counts()
+    with enable_taps():
+        eng.generate(prompts, 5)
+        eng.generate(prompts, 5, temperature=0.9)
+    eng.generate(prompts, 5)
+    assert obs_metrics.trace_counts() == before
+
+
+def test_cosim_taps_zero_retrace(aged_fleet):
+    aged_fleet.apply_load(workload="diurnal", utilization=0.6,
+                          horizon_s=YEAR_S)            # warm
+    before = obs_metrics.trace_counts()
+    with enable_taps():
+        cos = aged_fleet.apply_load(workload="diurnal", utilization=0.6,
+                                    horizon_s=YEAR_S)
+        cosim_taps(cos, aged_fleet.unit_scenario)
+    assert obs_metrics.trace_counts() == before
+
+
+# --------------------------------------------------------------------------- #
+# health snapshot: co-sim run and online run
+# --------------------------------------------------------------------------- #
+def test_health_from_cosim_run(aged_fleet):
+    with enable_taps():
+        aged_fleet.apply_load(workload="diurnal", utilization=0.7,
+                              horizon_s=YEAR_S)
+    h = aged_fleet.health()
+    assert h.n_units == 2
+    # the older device has less margin and more wear
+    assert h.dvth_p_mv[1] > h.dvth_p_mv[0] > 0
+    assert h.headroom_s[1] <= h.headroom_s[0]
+    assert (h.eta_s >= 0).all()
+    txt = h.render()
+    assert "aging odometer" in txt and "ETA[yr]" in txt
+    assert len([ln for ln in txt.splitlines()
+                if ln.strip().startswith(("0 ", "1 "))]) == 2
+    json.dumps(h.to_dict())                            # JSON-able end to end
+
+
+def test_health_eta_monotone_in_age():
+    """A freshly deployed device has at least as much service left as the
+    same device aged — ETA read off the same extrapolated trajectory."""
+    fl = FleetRuntime(n_devices=2)
+    fl.set_age(years=1.0, device=0)
+    fl.set_age(years=10.0, device=1)
+    h = fl.health()
+    assert h.eta_s[0] >= h.eta_s[1]
+
+
+def test_health_from_online_run(setup):
+    cfg, params, prompts = setup
+    fl = FleetRuntime(n_devices=1)
+    fl.set_age(years=6.0)
+    with enable_taps():
+        eng = OnlineServeEngine(cfg, params, runtime=fl, n_slots=2,
+                                max_len=MAX_LEN, max_new_cap=8,
+                                chunk_steps=4, seed=5)
+        res = eng.serve([Request(id=i, prompt=prompts[i], max_new=6,
+                                 arrival=2 * i) for i in range(3)],
+                        greedy=False, temperature=0.7, eos_id=-1)
+    h = fl.health(online_result=res)
+    assert h.extra["n_completed"] == float(res.n_completed)
+    assert h.extra["p50_latency_steps"] == res.p50
+    assert "p50_latency_steps" in h.render()
+    # the run recorded into the registry: latency histogram + counters
+    lat = obs_metrics.REGISTRY.get("online_latency_steps")
+    assert lat is not None and lat.count >= res.n_completed
+
+
+# --------------------------------------------------------------------------- #
+# obs_report CLI + export pipeline, in-process
+# --------------------------------------------------------------------------- #
+def test_obs_report_cli_cosim(tmp_path, capsys):
+    from repro.launch import obs_report
+    jsonl = tmp_path / "run.jsonl"
+    prom = tmp_path / "metrics.prom"
+    h = obs_report.main(["--quick", "--jsonl", str(jsonl),
+                         "--prom", str(prom)])
+    out = capsys.readouterr().out
+    assert "aging odometer" in out and "boost events" in out
+    assert h.n_units == 2
+    manifest, samples, other = obs_export.read_jsonl(jsonl)
+    assert manifest["run"] == "obs_report:cosim"
+    assert other and other[0]["type"] == "health"
+    assert len(other[0]["units"]) == h.n_units
+    parsed = obs_export.parse_prometheus(prom.read_text())
+    assert {s.name for s in parsed} & {"repro_trace_total",
+                                       "repro_compile_cache_misses_total"}
+
+
+def test_obs_report_cli_online(tmp_path, capsys):
+    from repro.launch import obs_report
+    jsonl = tmp_path / "run.jsonl"
+    h = obs_report.main(["--mode", "online", "--quick", "--n-devices", "1",
+                        "--jsonl", str(jsonl)])
+    out = capsys.readouterr().out
+    assert "aging odometer" in out and "p50_latency_steps" in out
+    assert not math.isnan(h.extra["drop_rate"])
+    _, _, other = obs_export.read_jsonl(jsonl)
+    assert other[0]["extra"]["n_completed"] >= 0
+
+
+# --------------------------------------------------------------------------- #
+# Telemetry pytree mechanics
+# --------------------------------------------------------------------------- #
+def test_telemetry_pytree_round_trip():
+    t = Telemetry({"b": np.ones(3), "a": np.zeros(2)})
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    assert [leaf.shape for leaf in leaves] == [(2,), (3,)]  # sorted keys
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert sorted(back.keys()) == ["a", "b"]
+    assert telemetry_to_host(None) is None
+    host = telemetry_to_host(t)
+    assert isinstance(host["a"], np.ndarray)
+    assert not taps_enabled()
+    with enable_taps():
+        assert taps_enabled()
+        with enable_taps(False):
+            assert not taps_enabled()
+        assert taps_enabled()
+    assert not taps_enabled()

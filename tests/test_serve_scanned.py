@@ -208,8 +208,8 @@ def test_fleet_engine_matches_per_lane_dispatch(setups):
     gen = _generate_fn(cfg, 64, 4, None)
     for i in range(N):
         fi_i = jax.tree.map(lambda x: x[i], fi)
-        toks = gen(params, jnp.asarray(lane_prompts[i], jnp.int32), fi_i,
-                   keys[i], jnp.float32(0.0))
+        toks, _ = gen(params, jnp.asarray(lane_prompts[i], jnp.int32),
+                      fi_i, keys[i], jnp.float32(0.0))
         np.testing.assert_array_equal(res.tokens[i], np.asarray(toks))
 
 

@@ -52,6 +52,8 @@ REQUIRED_MODULES = (
     "repro.serve.online", "repro.serve.sharded", "repro.kernels.ops",
     "repro.launch.schedule", "repro.distributed.sharding",
     "repro.distributed.collectives", "repro.distributed.elastic",
+    "repro.obs.metrics", "repro.obs.taps", "repro.obs.health",
+    "repro.obs.export",
 )
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
